@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: wall time is NOT TPU perf;
+``derived`` reports logical bytes/FLOPs so TPU projections use the roofline
+constants instead)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import time_fn
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(quick: bool) -> List[Dict]:
+    rows = []
+    n = 64 if quick else 512
+    x = (jax.random.normal(KEY, (n, 512))).astype(jnp.bfloat16)
+
+    for bits in (4, 8):
+        us = time_fn(lambda: ops.qpack_encode(x.reshape(-1), bits=bits,
+                                              block=512), iters=3)
+        logical = x.size * 2
+        rows.append({"name": f"kernel.qpack_encode_{bits}b", "us": us,
+                     "derived": f"logical_bytes={logical}"})
+        codes, scales = ops.qpack_encode(x.reshape(-1), bits=bits, block=512)
+        us = time_fn(lambda: ops.qpack_decode(codes, scales, bits=bits,
+                                              block=512), iters=3)
+        rows.append({"name": f"kernel.qpack_decode_{bits}b", "us": us,
+                     "derived": f"compressed_bytes={codes.size + scales.size * 4}"})
+
+    B, S, Hq, Hkv, D = (1, 256, 4, 2, 64) if quick else (2, 1024, 8, 2, 128)
+    q = jax.random.normal(KEY, (B, Hq, D)).astype(jnp.bfloat16)
+    k = jax.random.normal(KEY, (B, S, Hkv, D))
+    v = jax.random.normal(KEY, (B, S, Hkv, D))
+    from repro.core.compressor import quantize_blocks
+    kc, ks = quantize_blocks(k, 4, D)
+    vc, vs = quantize_blocks(v, 4, D)
+    lengths = jnp.full((B,), S, jnp.int32)
+    us = time_fn(lambda: ops.kvc_decode_attention(
+        q, kc, ks[..., 0], vc, vs[..., 0], lengths, bits=4, t_blk=128),
+        iters=3)
+    hbm_fused = kc.size + vc.size + ks.size * 4 + vs.size * 4
+    hbm_paper = k.size * 2 + v.size * 2 + hbm_fused  # promote then read bf16
+    rows.append({"name": "kernel.kvc_decode_attention", "us": us,
+                 "derived": f"fused_bytes={hbm_fused};paper_bytes={hbm_paper}"
+                            f";saving=x{hbm_paper / hbm_fused:.2f}"})
+
+    Sq = 128 if quick else 256
+    q2 = jax.random.normal(KEY, (1, Sq, 4, 64)).astype(jnp.bfloat16)
+    k2 = jax.random.normal(KEY, (1, Sq, 2, 64)).astype(jnp.bfloat16)
+    v2 = jax.random.normal(KEY, (1, Sq, 2, 64)).astype(jnp.bfloat16)
+    us = time_fn(lambda: ops.flash_attention(q2, k2, v2, causal=True,
+                                             tq=64, tk=64), iters=3)
+    flops = 4 * Sq * Sq * 4 * 64 // 2
+    rows.append({"name": "kernel.flash_attention", "us": us,
+                 "derived": f"logical_flops={flops}"})
+    return rows

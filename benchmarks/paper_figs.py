@@ -1,0 +1,229 @@
+"""One benchmark per paper figure/table (DESIGN.md §7 index).
+
+Each ``figXX`` function returns rows of dicts; run.py flattens them to the
+``name,us_per_call,derived`` CSV contract. ``quick`` trims workloads and
+access counts so the whole suite stays CPU-friendly.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.common.types import replace
+from repro.simx import device as DEV
+from repro.simx.engine import SCHEMES, run_workload
+from repro.simx.trace import WORKLOADS, WorkloadSpec
+
+QUICK_WL = ["mcf", "lbm", "omnetpp", "pr", "xsbench"]
+FULL_WL = list(WORKLOADS)
+N_Q, N_F = 4000, 12000
+PROM_Q, PROM_F = 64, 96
+
+
+def _wl(quick: bool) -> List[str]:
+    return QUICK_WL if quick else FULL_WL
+
+
+def _n(quick: bool) -> int:
+    return N_Q if quick else N_F
+
+
+def _prom(quick: bool) -> int:
+    return PROM_Q if quick else PROM_F
+
+
+def _cell(scheme: str, wl: str, quick: bool, **kw) -> Dict[str, float]:
+    t0 = time.perf_counter()
+    r = run_workload(scheme, WORKLOADS[wl], n_accesses=_n(quick),
+                     promoted_pages=_prom(quick), **kw)
+    r["wall_us"] = (time.perf_counter() - t0) * 1e6
+    return r
+
+
+def fig01_bandwidth(quick: bool) -> List[Dict]:
+    """Fig. 1: dual-channel vs ideal internal bandwidth (block compression)."""
+    rows = []
+    for wl in _wl(quick):
+        real = _cell("ibex_base", wl, quick)
+        ideal = _cell("ibex_base", wl, quick,
+                      device=DEV.ideal_bandwidth(DEV.DeviceConfig()))
+        rows.append({"name": f"fig01.{wl}", "us": real["wall_us"],
+                     "derived": f"limited/ideal="
+                                f"{real['time_s'] / ideal['time_s']:.3f}"})
+    return rows
+
+
+def fig09_speedup(quick: bool) -> List[Dict]:
+    """Fig. 9: normalized perf per scheme; headline IBEX-vs-TMCC/DyLeCT."""
+    schemes = ["ibex", "tmcc", "dylect", "mxt", "dmc", "compresso"]
+    perf: Dict[str, Dict[str, float]] = {s: {} for s in schemes}
+    rows = []
+    for s in schemes:
+        for wl in _wl(quick):
+            r = _cell(s, wl, quick)
+            perf[s][wl] = r["normalized_perf"]
+            rows.append({"name": f"fig09.{s}.{wl}", "us": r["wall_us"],
+                         "derived": f"norm_perf={r['normalized_perf']:.3f}"})
+    gm = {s: float(np.exp(np.mean(np.log([max(v, 1e-9) for v in perf[s].values()]))))
+          for s in schemes}
+    for other in ("tmcc", "dylect", "mxt", "dmc"):
+        rows.append({"name": f"fig09.speedup_ibex_over_{other}", "us": 0.0,
+                     "derived": f"x{gm['ibex'] / gm[other]:.2f}"})
+    return rows
+
+
+def fig10_ratio(quick: bool) -> List[Dict]:
+    """Fig. 10: compression ratios (IBEX-1KB, IBEX-4KB, MXT, Compresso)."""
+    rows = []
+    for name, scheme in (("ibex_1kb", "ibex"), ("ibex_4kb", "ibex_base"),
+                         ("mxt", "mxt"), ("compresso", "compresso")):
+        ratios = []
+        us = 0.0
+        for wl in _wl(quick):
+            r = _cell(scheme, wl, quick)
+            ratios.append(max(r["compression_ratio"], 1e-3))
+            us += r["wall_us"]
+        gm = float(np.exp(np.mean(np.log(ratios))))
+        rows.append({"name": f"fig10.{name}", "us": us,
+                     "derived": f"ratio={gm:.2f}"})
+    return rows
+
+
+def fig11_breakdown(quick: bool) -> List[Dict]:
+    """Fig. 11: per-class traffic, IBEX normalized to TMCC."""
+    rows = []
+    tot_i = tot_t = 0.0
+    for wl in _wl(quick):
+        ib = _cell("ibex", wl, quick)
+        tm = _cell("tmcc", wl, quick)
+        tot_i += ib["internal_accesses"]
+        tot_t += tm["internal_accesses"]
+        rows.append({
+            "name": f"fig11.{wl}", "us": ib["wall_us"] + tm["wall_us"],
+            "derived": (f"ibex/tmcc={ib['internal_accesses'] / max(tm['internal_accesses'], 1):.3f}"
+                        f";clean_frac={ib['demotions_clean'] / max(ib['demotions_clean'] + ib['demotions_dirty'], 1):.2f}")})
+    rows.append({"name": "fig11.total_traffic_reduction", "us": 0.0,
+                 "derived": f"{1 - tot_i / max(tot_t, 1):.1%}"})
+    return rows
+
+
+def fig12_background(quick: bool) -> List[Dict]:
+    """Fig. 12: practical vs miracle (no activity/scan traffic)."""
+    rows = []
+    for wl in _wl(quick):
+        r = _cell("ibex", wl, quick)
+        miracle = dict(r)
+        miracle_traffic = r["internal_accesses"] - r["activity_rd"] - r["activity_wr"]
+        t = {**{k: r[k] for k in ("host_reads", "host_writes", "zero_served",
+                                  "promotions", "demotions_dirty",
+                                  "recompress_retry")},
+             "internal_accesses": miracle_traffic}
+        tm = DEV.exec_time(t, DEV.DeviceConfig())
+        rows.append({"name": f"fig12.{wl}", "us": r["wall_us"],
+                     "derived": f"practical/miracle={r['time_s'] / tm:.3f}"})
+    return rows
+
+
+def fig13_ablation(quick: bool) -> List[Dict]:
+    """Fig. 13: traffic as S, C, M are applied incrementally."""
+    rows = []
+    for wl in (_wl(quick)[:3] if quick else _wl(quick)):
+        base = _cell("ibex_base", wl, quick)
+        s = _cell("ibex_s", wl, quick)
+        sc = _cell("ibex_sc", wl, quick)
+        scm = _cell("ibex_scm", wl, quick)
+        b = max(base["internal_accesses"], 1)
+        rows.append({
+            "name": f"fig13.{wl}", "us": base["wall_us"] + s["wall_us"]
+            + sc["wall_us"] + scm["wall_us"],
+            "derived": (f"S={s['internal_accesses'] / b:.3f};"
+                        f"SC={sc['internal_accesses'] / b:.3f};"
+                        f"SCM={scm['internal_accesses'] / b:.3f}")})
+    return rows
+
+
+def fig14_latency(quick: bool) -> List[Dict]:
+    """Fig. 14: sensitivity to CXL round-trip latency."""
+    rows = []
+    wl = "pr"
+    for lat in (70e-9, 150e-9, 250e-9, 400e-9):
+        dev = replace(DEV.DeviceConfig(), cxl_lat=lat)
+        r = _cell("ibex", wl, quick, device=dev)
+        rows.append({"name": f"fig14.cxl_{int(lat * 1e9)}ns", "us": r["wall_us"],
+                     "derived": f"norm_perf={r['normalized_perf']:.3f}"})
+    return rows
+
+
+def fig15_decomp(quick: bool) -> List[Dict]:
+    """Fig. 15: sensitivity to decompression cycles (robustness claim)."""
+    rows = []
+    vals = []
+    for cyc in (64, 128, 256, 512):
+        dev = replace(DEV.DeviceConfig(), decomp_cycles=cyc)
+        r = _cell("ibex", "mcf", quick, device=dev)
+        vals.append(r["normalized_perf"])
+        rows.append({"name": f"fig15.decomp_{cyc}cyc", "us": r["wall_us"],
+                     "derived": f"norm_perf={r['normalized_perf']:.3f}"})
+    drop = 1 - vals[-1] / max(vals[0], 1e-9)
+    rows.append({"name": "fig15.total_drop", "us": 0.0,
+                 "derived": f"{drop:.1%}"})
+    return rows
+
+
+def fig16_write(quick: bool) -> List[Dict]:
+    """Fig. 16: write-intensity sweep on the read-only workload (XSBench)."""
+    rows = []
+    base = None
+    for ratio in (0.0, 1 / 6, 1 / 3, 0.5, 2 / 3, 5 / 6):
+        spec = WORKLOADS["xsbench"]
+        spec = WorkloadSpec(spec.name, ratio, spec.zipf_a, spec.stream_frac,
+                            spec.footprint_pages, spec.zero_frac, spec.mix4,
+                            spec.mix8)
+        r = run_workload("ibex", spec, n_accesses=_n(quick),
+                         promoted_pages=_prom(quick))
+        if base is None:
+            base = r["time_s"]
+        rows.append({"name": f"fig16.rw_{ratio:.2f}", "us": 0.0,
+                     "derived": f"slowdown={r['time_s'] / base:.3f}"})
+    return rows
+
+
+def fig17_fault(quick: bool) -> List[Dict]:
+    """Fig. 17: page-fault reduction under 50%-of-working-set memory, using
+    each workload's measured compression ratio as the capacity multiplier."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for wl in _wl(quick):
+        r = _cell("ibex", wl, quick)
+        ratio = max(r["compression_ratio"], 1.0)
+        spec = WORKLOADS[wl]
+        n_pages = 512
+        from repro.simx.trace import make_trace
+        pages, _, _ = make_trace(spec, n_accesses=_n(quick), n_pages=n_pages)
+        for label, cap in (("base", n_pages // 2),
+                           ("ibex", min(int(n_pages // 2 * ratio), n_pages))):
+            resident: dict = {}
+            clockv = 0
+            faults = 0
+            for t, p in enumerate(pages):
+                if p in resident:
+                    resident[p] = t
+                    continue
+                faults += 1
+                if len(resident) >= cap:
+                    victim = min(resident, key=resident.get)
+                    del resident[victim]
+                resident[p] = t
+            if label == "base":
+                base_faults = faults
+        red = 1 - faults / max(base_faults, 1)
+        rows.append({"name": f"fig17.{wl}", "us": 0.0,
+                     "derived": f"fault_reduction={red:.1%}"})
+    return rows
+
+
+ALL_FIGS = [fig01_bandwidth, fig09_speedup, fig10_ratio, fig11_breakdown,
+            fig12_background, fig13_ablation, fig14_latency, fig15_decomp,
+            fig16_write, fig17_fault]

@@ -1,0 +1,48 @@
+"""Benchmark harness entry point: one function per paper table/figure plus
+kernel/system micro-benchmarks. Prints ``name,us_per_call,derived`` CSV.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run           # quick mode (CI-sized)
+  PYTHONPATH=src python -m benchmarks.run --full    # full workload sweep
+  PYTHONPATH=src python -m benchmarks.run --only fig09,kernel
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = not args.full
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+
+    from benchmarks import kernel_bench, paper_figs, system_bench
+
+    suites = [(f.__name__, lambda q, f=f: f(q)) for f in paper_figs.ALL_FIGS]
+    suites.append(("kernel", kernel_bench.run))
+    suites.append(("system", system_bench.run))
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if only and not any(name.startswith(o) or o in name for o in only):
+            continue
+        try:
+            for row in fn(quick):
+                print(f"{row['name']},{row['us']:.1f},{row['derived']}",
+                      flush=True)
+        except Exception as e:  # keep the suite running; count failures
+            failed += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

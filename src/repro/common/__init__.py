@@ -1,0 +1,1 @@
+from repro.common import sharding, types, utils  # noqa: F401

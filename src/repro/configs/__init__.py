@@ -1,0 +1,2 @@
+from repro.configs.registry import (ALIASES, ARCH_IDS, all_configs,  # noqa
+                                    describe, get_config, get_reduced)

@@ -1,0 +1,14 @@
+"""falcon-mamba-7b [ssm]: attention-free Mamba1 [arXiv:2410.05355;
+unverified]. No KV cache exists -> the paged-KV side of IBEX is inapplicable
+(DESIGN.md §Arch-applicability); IBEX still compresses optimizer state in
+training. Runs long_500k (O(1) decode state)."""
+from repro.common.types import ModelConfig, SSMConfig, replace
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm", num_layers=64, d_model=4096,
+    num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=65024, attn_kind="none",
+    ssm=SSMConfig(kind="mamba1", d_state=16, d_conv=4, expand=2, chunk=128))
+
+REDUCED = replace(
+    CONFIG, num_layers=2, d_model=128, vocab_size=512,
+    ssm=SSMConfig(kind="mamba1", d_state=8, d_conv=4, expand=2, chunk=32))

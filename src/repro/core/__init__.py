@@ -1,0 +1,3 @@
+"""IBEX core: promotion-based block-level compression management (Layer A)."""
+from repro.core import (activity, bitpack, compressor, freelist, mcache,
+                        metadata, pool)  # noqa: F401

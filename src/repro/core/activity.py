@@ -1,0 +1,115 @@
+"""Page-activity region + second-chance (clock) demotion engine (§4.4).
+
+The activity region holds one 4B entry per P-chunk: ``allocated | referenced |
+OSPN``; 16 entries per 64B fetch. The demotion cursor (clock hand) scans
+fetch-group by fetch-group:
+
+  * referenced=1 allocated entries get their bit reset (second chance);
+  * the first allocated, unreferenced entry whose page is NOT resident in the
+    metadata cache (probe, lazy-update safety) is the victim;
+  * if a fetched group contains allocated entries but no candidate, one of the
+    non-cache-resident allocated entries is chosen at random (bounded worst-case
+    bandwidth — paper reports 0.6% of selections);
+  * a group with no eligible entry at all advances the hand (rare: promoted
+    region is near-full whenever demotion runs).
+
+Each scanned group costs one 64B read + one 64B write (bit resets), which is
+exactly the paper's "control traffic" — counters are returned to the caller.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcache as mc
+from repro.core.metadata import (act_allocated, act_ospn, act_referenced,
+                                 act_set_referenced)
+
+GROUP = 16  # activity entries per 64B fetch
+
+
+class ScanResult(NamedTuple):
+    activity: jnp.ndarray
+    hand: jnp.ndarray
+    victim_pidx: jnp.ndarray     # P-chunk index, -1 if none found
+    victim_ospn: jnp.ndarray     # -1 if none
+    used_random: jnp.ndarray     # bool
+    groups_scanned: jnp.ndarray  # int32 — traffic: 1 rd + 1 wr of 64B each
+
+
+def clock_scan(activity: jnp.ndarray, hand: jnp.ndarray, cache: mc.MCache,
+               rng: jnp.ndarray, max_groups: int = 8,
+               force: jnp.ndarray | bool = False) -> ScanResult:
+    """``force`` widens the random fallback to cache-resident pages — the
+    emergency path when the promoted region is exhausted and every resident
+    page probes hot (cannot occur at the paper's region ratios, but a correct
+    device must not deadlock)."""
+    force = jnp.asarray(force)
+    n = activity.shape[0]
+    n_groups = n // GROUP
+
+    def probe_many(ospns: jnp.ndarray) -> jnp.ndarray:
+        return jax.vmap(lambda o: mc.probe(cache, o))(ospns)
+
+    def cond(carry):
+        (_, _, found, _, _, groups, _) = carry
+        return (~found) & (groups < max_groups)
+
+    def body(carry):
+        activity, hand, found, victim, used_rnd, groups, rng = carry
+        g = (hand // GROUP) % n_groups
+        start = g * GROUP
+        entries = jax.lax.dynamic_slice(activity, (start,), (GROUP,))
+        alloc = act_allocated(entries) == 1
+        ref = act_referenced(entries) == 1
+        ospns = act_ospn(entries).astype(jnp.int32)
+        probed = probe_many(ospns)
+        eligible = alloc & (~ref) & (~probed)
+        any_eligible = jnp.any(eligible)
+        first = jnp.argmax(eligible)
+        # random fallback among allocated, non-resident entries
+        rnd_pool = alloc & ((~probed) | force)
+        any_rnd = jnp.any(rnd_pool)
+        rng, sub = jax.random.split(rng)
+        weights = rnd_pool.astype(jnp.float32)
+        rnd_pick = jax.random.categorical(sub, jnp.log(weights + 1e-9))
+        pick = jnp.where(any_eligible, first, rnd_pick)
+        got = any_eligible | any_rnd
+        used_rnd_now = (~any_eligible) & any_rnd
+        victim_new = jnp.where(got, start + pick, -1)
+        # second chance: clear referenced bits of allocated entries in group
+        cleared = jnp.where(alloc, act_set_referenced(entries, 0), entries)
+        activity = jax.lax.dynamic_update_slice(activity, cleared, (start,))
+        hand = hand + GROUP
+        return (activity, hand, got, victim_new.astype(jnp.int32),
+                used_rnd_now, groups + 1, rng)
+
+    init = (activity, hand, jnp.asarray(False), jnp.asarray(-1, jnp.int32),
+            jnp.asarray(False), jnp.asarray(0, jnp.int32), rng)
+    activity, hand, found, victim, used_rnd, groups, _ = \
+        jax.lax.while_loop(cond, body, init)
+    ospn = jnp.where(victim >= 0, act_ospn(activity[jnp.maximum(victim, 0)]), -1)
+    return ScanResult(activity, hand, victim, ospn.astype(jnp.int32),
+                      used_rnd, groups)
+
+
+def mark_allocated(activity: jnp.ndarray, pidx: jnp.ndarray,
+                   ospn: jnp.ndarray) -> jnp.ndarray:
+    """Allocate activity entry for P-chunk ``pidx`` (referenced=1 on arrival)."""
+    from repro.core.metadata import act_pack
+    return activity.at[pidx].set(act_pack(1, 1, ospn))
+
+
+def mark_free(activity: jnp.ndarray, pidx: jnp.ndarray) -> jnp.ndarray:
+    return activity.at[pidx].set(jnp.uint32(0))
+
+
+def lazy_touch(activity: jnp.ndarray, pidx: jnp.ndarray) -> jnp.ndarray:
+    """Set the referenced bit (the §4.4 lazy update, performed on metadata-cache
+    eviction rather than on every access). pidx < 0 is a no-op."""
+    safe = jnp.maximum(pidx, 0)
+    e = activity[safe]
+    updated = activity.at[safe].set(act_set_referenced(e, 1))
+    return jax.lax.select(pidx >= 0, updated, activity)

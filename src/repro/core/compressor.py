@@ -1,0 +1,210 @@
+"""Rate-adaptive block compressor ("qpack") producing IBEX's chunked layout.
+
+A 4KB page = 4 x 1KB blocks (co-location, §4.6). Each block is independently
+encoded at one of four rates (zero / 4-bit / 8-bit / raw) and its stream is
+compacted at 128B quanta granularity; the per-page quanta total determines
+``num_chunks`` (512B C-chunks, §4.1.1). ``block_sz[i]`` is the paper's 3-bit
+(s+1)*128B size code.
+
+Block stream layout (this repo's TPU-native format):
+  RATE_ZERO : 0 quanta
+  RATE_4BIT : 3 quanta  = f32 scale (4B) + 256B packed int4 + pad
+  RATE_8BIT : 5 quanta  = f32 scale (4B) + 512B int8 + pad
+  RATE_RAW  : 8 quanta  = 1024B raw bf16
+
+4KB-block mode (co-location disabled; paper baseline in Fig. 13) treats the
+page as a single 2048-value block: sizes {0, 9, 17, 32} quanta.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import PoolConfig
+from repro.common.utils import bytes_to_f32, f32_to_bytes
+from repro.core.bitpack import (RATE_4BIT, RATE_8BIT, RATE_RAW, RATE_ZERO,
+                                bytes_to_raw, dequantize_block, pack4, pack8,
+                                quantize_block, raw_to_bytes, unpack4, unpack8)
+
+QUANTUM = 128
+
+
+def block_quanta_table(vals_per_block: int) -> jnp.ndarray:
+    """quanta per rate code for a block of ``vals_per_block`` bf16 values."""
+    b4 = -(-(4 + vals_per_block // 2) // QUANTUM)
+    b8 = -(-(4 + vals_per_block) // QUANTUM)
+    braw = (2 * vals_per_block) // QUANTUM
+    return jnp.array([0, b4, b8, braw], dtype=jnp.int32)
+
+
+def select_rate(x: jnp.ndarray, cfg: PoolConfig) -> jnp.ndarray:
+    """Pick the cheapest admissible rate for block(s) ``x[..., vals]``."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    q4, s4 = quantize_block(x, 4)
+    q8, s8 = quantize_block(x, 8)
+    if cfg.lossless:
+        ok4 = jnp.all(dequantize_block(q4, s4) == x.astype(jnp.bfloat16), axis=-1)
+        ok8 = jnp.all(dequantize_block(q8, s8) == x.astype(jnp.bfloat16), axis=-1)
+    else:
+        err4 = jnp.max(jnp.abs(dequantize_block(q4, s4).astype(jnp.float32) - xf), axis=-1)
+        err8 = jnp.max(jnp.abs(dequantize_block(q8, s8).astype(jnp.float32) - xf), axis=-1)
+        safe = jnp.where(amax > 0, amax, 1.0)
+        ok4 = err4 / safe <= cfg.tol4
+        ok8 = err8 / safe <= cfg.tol8
+    rate = jnp.where(ok8, RATE_8BIT, RATE_RAW)
+    rate = jnp.where(ok4, RATE_4BIT, rate)
+    rate = jnp.where(amax == 0, RATE_ZERO, rate)
+    return rate.astype(jnp.int32)
+
+
+def _encode_block_dense(x: jnp.ndarray, rate: jnp.ndarray) -> jnp.ndarray:
+    """Encode one block at ``rate`` into a dense worst-case uint8 buffer
+    (2*vals bytes); only the first ``quanta*128`` bytes are meaningful."""
+    vals = x.shape[-1]
+    nbytes = 2 * vals
+    q4, s4 = quantize_block(x, 4)
+    q8, s8 = quantize_block(x, 8)
+
+    def enc_zero() -> jnp.ndarray:
+        return jnp.zeros((nbytes,), jnp.uint8)
+
+    def enc4() -> jnp.ndarray:
+        buf = jnp.zeros((nbytes,), jnp.uint8)
+        buf = jax.lax.dynamic_update_slice(buf, f32_to_bytes(s4[None]), (0,))
+        return jax.lax.dynamic_update_slice(buf, pack4(q4), (4,))
+
+    def enc8() -> jnp.ndarray:
+        buf = jnp.zeros((nbytes,), jnp.uint8)
+        buf = jax.lax.dynamic_update_slice(buf, f32_to_bytes(s8[None]), (0,))
+        return jax.lax.dynamic_update_slice(buf, pack8(q8), (4,))
+
+    def enc_raw() -> jnp.ndarray:
+        return raw_to_bytes(x.astype(jnp.bfloat16))
+
+    return jax.lax.switch(rate, [enc_zero, enc4, enc8, enc_raw])
+
+
+def _decode_block_dense(buf: jnp.ndarray, rate: jnp.ndarray, vals: int) -> jnp.ndarray:
+    """Inverse of ``_encode_block_dense``; ``buf`` is the dense 2*vals buffer."""
+    def dec_zero() -> jnp.ndarray:
+        return jnp.zeros((vals,), jnp.bfloat16)
+
+    def dec4() -> jnp.ndarray:
+        scale = bytes_to_f32(jax.lax.dynamic_slice(buf, (0,), (4,)))[0]
+        codes = jax.lax.dynamic_slice(buf, (4,), (vals // 2,))
+        return (unpack4(codes, vals).astype(jnp.float32) * scale).astype(jnp.bfloat16)
+
+    def dec8() -> jnp.ndarray:
+        scale = bytes_to_f32(jax.lax.dynamic_slice(buf, (0,), (4,)))[0]
+        codes = jax.lax.dynamic_slice(buf, (4,), (vals,))
+        return (unpack8(codes).astype(jnp.float32) * scale).astype(jnp.bfloat16)
+
+    def dec_raw() -> jnp.ndarray:
+        return bytes_to_raw(buf[: 2 * vals])
+
+    return jax.lax.switch(rate, [dec_zero, dec4, dec8, dec_raw])
+
+
+def encode_page(x: jnp.ndarray, cfg: PoolConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compress a page of ``vals_per_page`` bf16 values.
+
+    Returns (buf uint8[page_bytes] with compacted streams, rates i32[B],
+    quanta i32[B], num_chunks i32[]) where B = blocks_per_page (co-location)
+    or 1 (4KB-block mode)."""
+    nblocks = cfg.blocks_per_page if cfg.coloc else 1
+    vals = x.shape[-1] // nblocks
+    blocks = x.reshape(nblocks, vals)
+    rates = select_rate(blocks, cfg)
+    if not cfg.zero_elision:
+        rates = jnp.maximum(rates, RATE_4BIT)
+    qt = block_quanta_table(vals)
+    quanta = qt[rates]
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(quanta)[:-1]])
+    buf = jnp.zeros((cfg.page_bytes,), jnp.uint8)
+    for i in range(nblocks):          # static trip count (4 or 1)
+        dense = _encode_block_dense(blocks[i], rates[i])
+        # write the dense worst-case buffer at the compacted offset; overlap
+        # with later blocks is fine because later writes overwrite pad bytes.
+        start = offsets[i] * QUANTUM
+        shifted = jax.lax.dynamic_update_slice(
+            jnp.zeros((cfg.page_bytes,), jnp.uint8), dense, (start,))
+        live = (jnp.arange(cfg.page_bytes, dtype=jnp.int32) >= start) & \
+               (jnp.arange(cfg.page_bytes, dtype=jnp.int32) < start + quanta[i] * QUANTUM)
+        buf = jnp.where(live, shifted, buf)
+    total_quanta = jnp.sum(quanta)
+    qpc = cfg.chunk_bytes // QUANTUM
+    num_chunks = -(-total_quanta // qpc)
+    return buf, rates, quanta, num_chunks.astype(jnp.int32)
+
+
+def decode_page(buf: jnp.ndarray, rates: jnp.ndarray, cfg: PoolConfig) -> jnp.ndarray:
+    """Decompress all blocks of a page buffer back to bf16 values."""
+    nblocks = rates.shape[0]
+    vals = cfg.vals_per_page // nblocks
+    qt = block_quanta_table(vals)
+    quanta = qt[rates]
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(quanta)[:-1]])
+    outs = []
+    for i in range(nblocks):
+        dense = jax.lax.dynamic_slice(buf, (offsets[i] * QUANTUM,), (2 * vals,))
+        outs.append(_decode_block_dense(dense, rates[i], vals))
+    return jnp.concatenate(outs, axis=0)
+
+
+def decode_block(buf: jnp.ndarray, rates: jnp.ndarray, idx: jnp.ndarray,
+                 cfg: PoolConfig) -> jnp.ndarray:
+    """Decompress a single co-located block ``idx`` (uses block_sz prefix sums
+    exactly as the metadata format intends)."""
+    nblocks = rates.shape[0]
+    vals = cfg.vals_per_page // nblocks
+    qt = block_quanta_table(vals)
+    quanta = qt[rates]
+    prefix = jnp.cumsum(quanta) - quanta
+    start = prefix[idx] * QUANTUM
+    dense = jax.lax.dynamic_slice(buf, (start,), (2 * vals,))
+    return _decode_block_dense(dense, rates[idx], vals)
+
+
+# ---------------------------------------------------------------------------
+# Flat fixed-rate tensor quantization (KV cache / optimizer-state fast path).
+# ---------------------------------------------------------------------------
+
+def quantize_blocks(x: jnp.ndarray, bits: int, block: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x[..., N] -> (packed codes uint8[..., N*bits/8], scales f32[..., N/block])."""
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    xb = x.reshape(lead + (n // block, block))
+    q, s = quantize_block(xb, bits)
+    if bits == 4:
+        codes = pack4(q).reshape(lead + (n // 2,))
+    elif bits == 8:
+        codes = pack8(q).reshape(lead + (n,))
+    else:
+        raise ValueError(f"bits={bits}")
+    return codes, s
+
+
+def dequantize_blocks(codes: jnp.ndarray, scales: jnp.ndarray, bits: int,
+                      block: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    lead = scales.shape[:-1]
+    nb = scales.shape[-1]
+    if bits == 4:
+        cb = codes.reshape(lead + (nb, block // 2))
+        q = unpack4(cb, block)
+    elif bits == 8:
+        cb = codes.reshape(lead + (nb, block))
+        q = unpack8(cb)
+    else:
+        raise ValueError(f"bits={bits}")
+    return dequantize_block(q, scales, dtype).reshape(lead + (nb * block,))
+
+
+def page_compressed_bytes(rates: jnp.ndarray, vals_per_block: int) -> jnp.ndarray:
+    """Actual bytes a page occupies in the compressed region (quanta-rounded)."""
+    qt = block_quanta_table(vals_per_block)
+    return jnp.sum(qt[rates], axis=-1) * QUANTUM

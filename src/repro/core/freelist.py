@@ -1,0 +1,80 @@
+"""Functional free-chunk lists (§4.1.1).
+
+The paper tracks free C-chunks and P-chunks with linked lists plus a head
+register each. A functional array-stack is the JAX-native equivalent: ``items``
+holds free chunk indices, ``top`` is the head register. Pop returns the head;
+push writes back. All ops are O(1) and jit-safe; popping an empty list returns
+sentinel -1 (callers must check, mirroring the hardware's watermark logic that
+prevents true exhaustion).
+
+Compaction (§4.7) splits the compressed region into sub-regions so chunk
+pointers share MSBs. We model S sub-regions as S independent stacks laid out in
+one array; the allocator round-robins pages across sub-regions ("all C-chunks
+allocated to a single OSPA page must belong to the same sub-region").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FreeList(NamedTuple):
+    items: jnp.ndarray      # int32[capacity]
+    top: jnp.ndarray        # int32[] — number of free items (head register)
+
+    @property
+    def capacity(self) -> int:
+        return self.items.shape[0]
+
+
+def make_freelist(n: int, reverse: bool = False) -> FreeList:
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if reverse:
+        idx = idx[::-1]
+    return FreeList(items=idx, top=jnp.asarray(n, jnp.int32))
+
+
+def free_count(fl: FreeList) -> jnp.ndarray:
+    return fl.top
+
+
+def pop(fl: FreeList) -> Tuple[FreeList, jnp.ndarray]:
+    """Pop one index; returns -1 if empty."""
+    has = fl.top > 0
+    idx = jnp.where(has, fl.items[jnp.maximum(fl.top - 1, 0)], -1)
+    new_top = jnp.where(has, fl.top - 1, fl.top)
+    return FreeList(fl.items, new_top), idx.astype(jnp.int32)
+
+
+def push(fl: FreeList, idx: jnp.ndarray) -> FreeList:
+    """Push one index; idx < 0 is a no-op (makes masked pushes trivial)."""
+    do = idx >= 0
+    pos = jnp.clip(fl.top, 0, fl.capacity - 1)
+    items = jax.lax.select(do, fl.items.at[pos].set(idx.astype(jnp.int32)), fl.items)
+    top = jnp.where(do, fl.top + 1, fl.top)
+    return FreeList(items, top)
+
+
+def pop_n(fl: FreeList, k: int, valid_n: jnp.ndarray) -> Tuple[FreeList, jnp.ndarray]:
+    """Pop up to ``k`` (static) indices, of which only the first ``valid_n``
+    (dynamic) are actually consumed. Returns int32[k] with -1 padding."""
+    def body(i, carry):
+        fl_c, out = carry
+        take = i < valid_n
+        fl2, idx = pop(fl_c)
+        fl_c = jax.tree_util.tree_map(
+            lambda a, b: jax.lax.select(take, a, b), fl2, fl_c)
+        out = out.at[i].set(jnp.where(take, idx, -1))
+        return fl_c, out
+    out0 = jnp.full((k,), -1, jnp.int32)
+    fl, out = jax.lax.fori_loop(0, k, body, (fl, out0))
+    return fl, out
+
+
+def push_n(fl: FreeList, idxs: jnp.ndarray) -> FreeList:
+    """Push all non-negative entries of ``idxs`` (static length)."""
+    def body(i, fl_c):
+        return push(fl_c, idxs[i])
+    return jax.lax.fori_loop(0, idxs.shape[0], body, fl)

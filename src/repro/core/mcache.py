@@ -1,0 +1,73 @@
+"""Set-associative LRU metadata-cache model (§4.1.2, Table 1: 16-way 96KB).
+
+The cache holds metadata entries keyed by OSPN. It drives two paper mechanisms:
+  * traffic: a hit serves translation with zero memory accesses; a miss costs a
+    metadata read (1 access compacted; 2 when uncompacted entries straddle 64B);
+  * the lazy reference update (§4.4): the activity-region ``referenced`` bit is
+    written only when an entry is *evicted* from this cache, and the demotion
+    engine *probes* this cache to avoid demoting resident (hot) pages.
+
+Functional state: tags int32[sets, ways] (OSPN, -1 invalid) + age uint8 (LRU
+stack position, 0 = MRU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MCache(NamedTuple):
+    tags: jnp.ndarray    # int32[sets, ways]
+    age: jnp.ndarray     # int32[sets, ways]; 0 == MRU
+
+
+def make_mcache(sets: int, ways: int) -> MCache:
+    return MCache(tags=jnp.full((sets, ways), -1, jnp.int32),
+                  age=jnp.tile(jnp.arange(ways, dtype=jnp.int32), (sets, 1)))
+
+
+def _set_index(ospn: jnp.ndarray, sets: int) -> jnp.ndarray:
+    # simple xor-fold hash; OSPNs are random-allocated (paper §5) so low bits ok
+    x = jnp.asarray(ospn, jnp.uint32)
+    x = x ^ (x >> jnp.uint32(13))
+    return (x % jnp.uint32(sets)).astype(jnp.int32)
+
+
+def access(mc: MCache, ospn: jnp.ndarray) -> Tuple[MCache, jnp.ndarray, jnp.ndarray]:
+    """Touch ``ospn``: returns (new_cache, hit, evicted_ospn).
+
+    evicted_ospn is -1 unless a valid entry was displaced (the lazy-update
+    moment). The inserted/hit way becomes MRU."""
+    s = _set_index(ospn, mc.tags.shape[0])
+    tags = mc.tags[s]
+    age = mc.age[s]
+    match = tags == jnp.asarray(ospn, jnp.int32)
+    hit = jnp.any(match)
+    hit_way = jnp.argmax(match)
+    victim_way = jnp.argmax(age)                # LRU way
+    way = jnp.where(hit, hit_way, victim_way)
+    evicted = jnp.where(hit, -1, tags[victim_way])
+    new_tags = tags.at[way].set(jnp.asarray(ospn, jnp.int32))
+    # promote `way` to MRU: everything younger than it ages by one
+    w_age = age[way]
+    new_age = jnp.where(age < w_age, age + 1, age)
+    new_age = new_age.at[way].set(0)
+    return (MCache(mc.tags.at[s].set(new_tags), mc.age.at[s].set(new_age)),
+            hit, evicted.astype(jnp.int32))
+
+
+def probe(mc: MCache, ospn: jnp.ndarray) -> jnp.ndarray:
+    """Non-destructive residency check (used by the demotion engine)."""
+    s = _set_index(ospn, mc.tags.shape[0])
+    return jnp.any(mc.tags[s] == jnp.asarray(ospn, jnp.int32))
+
+
+def invalidate(mc: MCache, ospn: jnp.ndarray) -> MCache:
+    s = _set_index(ospn, mc.tags.shape[0])
+    tags = mc.tags[s]
+    match = tags == jnp.asarray(ospn, jnp.int32)
+    new_tags = jnp.where(match, -1, tags)
+    new_age = jnp.where(match, mc.age.shape[1] - 1, mc.age[s])
+    return MCache(mc.tags.at[s].set(new_tags), mc.age.at[s].set(new_age))

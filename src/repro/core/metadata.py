@@ -1,0 +1,218 @@
+"""IBEX compression metadata: compacted 32B entries (§4.6 co-location +
+§4.7 compaction), plus the 4B page-activity entry format (§4.4).
+
+Entry = uint32[8]:
+
+word0 header
+  bits  0..19 : 4 x (block_type 2b | block_sz 3b)     [co-location, §4.6]
+  bits 20..23 : num_chunks (0..8)
+  bits 24..27 : wr_cntr                                [incompressible retry]
+  bit  28     : shadow_valid                           [shadowed promotion §4.5]
+  bit  29     : dirty      (promoted copy modified)
+  bit  30     : promoted   (P-chunk allocated)
+  bit  31     : valid      (entry allocated)
+words 1..6    : C-chunk pointers (28-bit, sub-region compacted, §4.7)
+word  7       : C-chunk pointer OR P-chunk pointer when promoted (the paper's
+                29-bit "last pointer"; §4.7)
+
+block_type values follow the paper (§4.1.2 types, per-block under co-location):
+  BT_ZERO / BT_COMP / BT_PROM / BT_INCOMP
+block_sz s encodes (s+1)*128B. Our rate codes map bijectively:
+  zero   <-> (BT_ZERO , s=0)
+  4-bit  <-> (BT_COMP , s=2)   3 quanta
+  8-bit  <-> (BT_COMP , s=4)   5 quanta
+  raw    <-> (BT_INCOMP, s=7)  8 quanta
+An all-raw page (num_chunks would be 8 > 7 pointer slots) becomes an
+INCOMPRESSIBLE page stored in one aligned 8-chunk group behind a single
+pointer — this is how the 32B compacted entry keeps full addressability.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.utils import get_bits, set_bits
+from repro.core.bitpack import RATE_4BIT, RATE_8BIT, RATE_RAW, RATE_ZERO
+
+ENTRY_WORDS = 8
+
+BT_ZERO = 0
+BT_COMP = 1
+BT_PROM = 2
+BT_INCOMP = 3
+
+_RATE_TO_SZ = jnp.array([0, 2, 4, 7], dtype=jnp.uint32)      # indexed by rate
+_RATE_TO_BT = jnp.array([BT_ZERO, BT_COMP, BT_COMP, BT_INCOMP], dtype=jnp.uint32)
+# sz -> rate (valid sz values 0,2,4,7; others map to zero)
+_SZ_TO_RATE = jnp.array([RATE_ZERO, RATE_ZERO, RATE_4BIT, RATE_ZERO,
+                         RATE_8BIT, RATE_ZERO, RATE_ZERO, RATE_RAW], dtype=jnp.int32)
+
+
+def empty_entry() -> jnp.ndarray:
+    return jnp.zeros((ENTRY_WORDS,), jnp.uint32)
+
+
+def empty_table(n_pages: int) -> jnp.ndarray:
+    return jnp.zeros((n_pages, ENTRY_WORDS), jnp.uint32)
+
+
+# -- header field accessors (operate on word0, vectorized over leading dims) --
+
+def get_block_type(w0: jnp.ndarray, i) -> jnp.ndarray:
+    return get_bits(w0, 5 * _as_int(i), 2) if isinstance(i, int) else \
+        get_bits(w0, (jnp.asarray(i) * 5).astype(jnp.uint32), 2)
+
+
+def _as_int(i: int) -> int:
+    return i
+
+
+def get_block_type_dyn(w0: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
+    return (w0 >> (jnp.asarray(i, jnp.uint32) * 5)) & jnp.uint32(0x3)
+
+
+def set_block_type(w0: jnp.ndarray, i: int, v) -> jnp.ndarray:
+    return set_bits(w0, 5 * i, 2, v)
+
+
+def get_block_sz(w0: jnp.ndarray, i: int) -> jnp.ndarray:
+    return get_bits(w0, 5 * i + 2, 3)
+
+
+def get_block_sz_dyn(w0: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
+    return (w0 >> (jnp.asarray(i, jnp.uint32) * 5 + 2)) & jnp.uint32(0x7)
+
+
+def set_block_sz(w0: jnp.ndarray, i: int, v) -> jnp.ndarray:
+    return set_bits(w0, 5 * i + 2, 3, v)
+
+
+def get_num_chunks(w0: jnp.ndarray) -> jnp.ndarray:
+    return get_bits(w0, 20, 4)
+
+
+def set_num_chunks(w0: jnp.ndarray, v) -> jnp.ndarray:
+    return set_bits(w0, 20, 4, v)
+
+
+def get_wr_cntr(w0: jnp.ndarray) -> jnp.ndarray:
+    return get_bits(w0, 24, 4)
+
+
+def set_wr_cntr(w0: jnp.ndarray, v) -> jnp.ndarray:
+    return set_bits(w0, 24, 4, v)
+
+
+def get_shadow_valid(w0: jnp.ndarray) -> jnp.ndarray:
+    return get_bits(w0, 28, 1)
+
+
+def set_shadow_valid(w0: jnp.ndarray, v) -> jnp.ndarray:
+    return set_bits(w0, 28, 1, v)
+
+
+def get_dirty(w0: jnp.ndarray) -> jnp.ndarray:
+    return get_bits(w0, 29, 1)
+
+
+def set_dirty(w0: jnp.ndarray, v) -> jnp.ndarray:
+    return set_bits(w0, 29, 1, v)
+
+
+def get_promoted(w0: jnp.ndarray) -> jnp.ndarray:
+    return get_bits(w0, 30, 1)
+
+
+def set_promoted(w0: jnp.ndarray, v) -> jnp.ndarray:
+    return set_bits(w0, 30, 1, v)
+
+
+def get_valid(w0: jnp.ndarray) -> jnp.ndarray:
+    return get_bits(w0, 31, 1)
+
+
+def set_valid(w0: jnp.ndarray, v) -> jnp.ndarray:
+    return set_bits(w0, 31, 1, v)
+
+
+# -- pointer slots ---------------------------------------------------------
+
+PTR_MASK = jnp.uint32((1 << 29) - 1)
+
+
+def get_ptr(entry: jnp.ndarray, slot) -> jnp.ndarray:
+    return entry[..., 1 + slot] & PTR_MASK if isinstance(slot, int) else \
+        jnp.take_along_axis(entry, jnp.asarray(slot)[..., None] + 1, axis=-1)[..., 0] & PTR_MASK
+
+
+def set_ptr(entry: jnp.ndarray, slot: int, v) -> jnp.ndarray:
+    return entry.at[..., 1 + slot].set(jnp.asarray(v).astype(jnp.uint32) & PTR_MASK)
+
+
+PCHUNK_SLOT = ENTRY_WORDS - 2  # word7 == slot 6 (the paper's "last pointer")
+
+
+# -- rate <-> (type, sz) mapping -------------------------------------------
+
+def header_from_rates(rates: jnp.ndarray) -> jnp.ndarray:
+    """Build word0 block fields from per-block rate codes (page not promoted,
+    not dirty, wr_cntr=0, valid=1)."""
+    w0 = jnp.uint32(0)
+    nblocks = rates.shape[0]
+    for i in range(nblocks):
+        w0 = set_block_type(w0, i, _RATE_TO_BT[rates[i]])
+        w0 = set_block_sz(w0, i, _RATE_TO_SZ[rates[i]])
+    w0 = set_valid(w0, 1)
+    return w0
+
+
+def rates_from_header(w0: jnp.ndarray, nblocks: int = 4) -> jnp.ndarray:
+    """Recover per-block rate codes from (type, sz) fields. Works for both
+    resident-compressed and promoted-with-shadow pages (sz is preserved)."""
+    rates = []
+    for i in range(nblocks):
+        bt = get_block_type(w0, i)
+        sz = get_block_sz(w0, i)
+        r = _SZ_TO_RATE[sz]
+        r = jnp.where(bt == BT_ZERO, RATE_ZERO, r)
+        rates.append(r)
+    return jnp.stack(rates).astype(jnp.int32)
+
+
+def quanta_from_header(w0: jnp.ndarray, nblocks: int = 4) -> jnp.ndarray:
+    """Per-block quanta counts (0 for zero blocks, else sz+1)."""
+    qs = []
+    for i in range(nblocks):
+        bt = get_block_type(w0, i)
+        sz = get_block_sz(w0, i)
+        qs.append(jnp.where(bt == BT_ZERO, 0, sz.astype(jnp.int32) + 1))
+    return jnp.stack(qs)
+
+
+# -- page activity entries (§4.4) -------------------------------------------
+
+ACT_ALLOCATED_BIT = 31
+ACT_REFERENCED_BIT = 30
+ACT_OSPN_MASK = jnp.uint32((1 << 30) - 1)
+
+
+def act_pack(allocated, referenced, ospn) -> jnp.ndarray:
+    a = jnp.asarray(allocated).astype(jnp.uint32) << jnp.uint32(ACT_ALLOCATED_BIT)
+    r = jnp.asarray(referenced).astype(jnp.uint32) << jnp.uint32(ACT_REFERENCED_BIT)
+    return a | r | (jnp.asarray(ospn).astype(jnp.uint32) & ACT_OSPN_MASK)
+
+
+def act_allocated(e: jnp.ndarray) -> jnp.ndarray:
+    return (e >> jnp.uint32(ACT_ALLOCATED_BIT)) & jnp.uint32(1)
+
+
+def act_referenced(e: jnp.ndarray) -> jnp.ndarray:
+    return (e >> jnp.uint32(ACT_REFERENCED_BIT)) & jnp.uint32(1)
+
+
+def act_ospn(e: jnp.ndarray) -> jnp.ndarray:
+    return e & ACT_OSPN_MASK
+
+
+def act_set_referenced(e: jnp.ndarray, v) -> jnp.ndarray:
+    cleared = e & ~(jnp.uint32(1) << jnp.uint32(ACT_REFERENCED_BIT))
+    return cleared | (jnp.asarray(v).astype(jnp.uint32) << jnp.uint32(ACT_REFERENCED_BIT))

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for IBEX hot spots (validated vs ref.py in interpret
+mode): qpack compression engine, fused dequant decode-attention, flash
+attention prefill."""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,87 @@
+"""Flash attention forward (causal, GQA) — the prefill hot path.
+
+Standard TPU schedule: grid (batch, q_head, Sq/Tq, Sk/Tk) with the KV axis
+minor (sequential), online-softmax accumulators in VMEM scratch, causal
+block-skip via pl.when. Tq/Tk default 128 (MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, tq: int, tk: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (j * tk <= i * tq + tq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)            # [Tq, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [Tk, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # [Tk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            row = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+            col = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+            s = jnp.where(col <= row, s, NEG_INF)
+        m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "tq", "tk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    tq: int = 128, tk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D] (GQA: Hq % Hkv == 0). -> [B,Sq,Hq,D]."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Sq % tq == 0 and Sk % tk == 0, (Sq, Sk, tq, tk)
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    g = Hq // Hkv
+    grid = (B, Hq, Sq // tq, Sk // tk)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=float(sm_scale),
+                          causal=causal, tq=tq, tk=tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, tk, 1, D), lambda b, h, i, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, tk, 1, D), lambda b, h, i, j: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((tq, 1), jnp.float32),
+                        pltpu.VMEM((tq, 1), jnp.float32),
+                        pltpu.VMEM((tq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,115 @@
+"""Fused dequantize-attention over compressed KV pages (beyond-paper opt #1).
+
+The paper must *promote* (migrate+decompress) a compressed page before serving
+reads from it — two round trips over the scarce internal bandwidth. On TPU the
+consumer of a KV page is the attention kernel itself, so we fuse: the kernel
+streams *compressed* KV (int4/int8 codes + per-(token,head) scales) from HBM
+into VMEM, dequantizes in registers, and runs flash-style online-softmax
+attention. HBM bytes moved = compressed bytes — strictly fewer than even an
+uncompressed read, eliminating promotion traffic entirely for reads.
+
+Layout: one quantization block per (token, kv-head) spanning the head dim D
+(D = 64..256, a multiple of the 128-lane VPU for D>=128).
+
+Grid: (batch, kv_head, S/T). Sequential minor axis accumulates in VMEM scratch
+(m, l, acc) — the standard TPU flash decode schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dequant(c, scale, bits):
+    if bits == 4:
+        lo = (c & jnp.uint8(0xF)).astype(jnp.int32)
+        hi = (c >> jnp.uint8(4)).astype(jnp.int32)
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=-1).reshape(c.shape[0], c.shape[1] * 2)
+    else:
+        q = c.astype(jnp.int8).astype(jnp.int32)
+    return q.astype(jnp.float32) * scale
+
+
+def _kvc_kernel(len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
+                m_scr, l_scr, acc_scr, *, bits: int, sm_scale: float,
+                t_blk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # [G, D]
+    k = _dequant(kc_ref[0, :, 0, :], ks_ref[0, :, 0, :], bits)   # [T, D]
+    v = _dequant(vc_ref[0, :, 0, :], vs_ref[0, :, 0, :], bits)   # [T, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    # context-length mask
+    length = len_ref[0]
+    col = j * t_blk + jax.lax.broadcasted_iota(jnp.int32, (1, t_blk), 1)
+    s = jnp.where(col < length, s, NEG_INF)                 # [G, T]
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # [G, T]
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "sm_scale", "t_blk",
+                                             "interpret"))
+def kvc_decode_attention(q: jnp.ndarray, k_codes: jnp.ndarray,
+                         k_scales: jnp.ndarray, v_codes: jnp.ndarray,
+                         v_scales: jnp.ndarray, lengths: jnp.ndarray, *,
+                         bits: int = 4, sm_scale: float | None = None,
+                         t_blk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """q [B,Hq,D]; codes uint8 [B,S,Hkv,D*bits/8]; scales f32 [B,S,Hkv];
+    lengths int32[B]. Returns [B,Hq,D] (q.dtype)."""
+    B, Hq, D = q.shape
+    _, S, Hkv, Dp = k_codes.shape
+    G = Hq // Hkv
+    assert S % t_blk == 0, (S, t_blk)
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, G, D)
+    ks = k_scales[..., None]
+    vs = v_scales[..., None]
+    grid = (B, Hkv, S // t_blk)
+    out = pl.pallas_call(
+        functools.partial(_kvc_kernel, bits=bits, sm_scale=float(sm_scale),
+                          t_blk=t_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),                  # lengths
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, t_blk, 1, Dp), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, t_blk, 1, 1), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, t_blk, 1, Dp), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, t_blk, 1, 1), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+        interpret=interpret,
+    )(lengths, qg, k_codes, ks, v_codes, vs)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,67 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``INTERPRET`` defaults to True off-TPU (this container validates kernels with
+the Pallas interpreter); on a real TPU backend the compiled kernels run. The
+wrappers also adapt shapes to/from the flat layouts used elsewhere
+(core.compressor.quantize_blocks et al.).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attn as _fa
+from repro.kernels import kvc_attn as _ka
+from repro.kernels import qpack as _qp
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def qpack_encode(x: jnp.ndarray, bits: int = 4, block: int = 512):
+    """x[..., N] -> (codes uint8[..., N*bits/8], scales f32[..., N/block]).
+    Shape-compatible with core.compressor.quantize_blocks."""
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    nblk = n // block
+    total_blocks = int(jnp.prod(jnp.asarray(lead + (nblk,)))) if lead else nblk
+    # pad block count to the kernel tile
+    pad = (-total_blocks) % _qp.TILE
+    x2 = x.reshape(total_blocks, block)
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, block), x.dtype)], axis=0)
+    codes, scales = _qp.qpack_encode_2d(x2, bits=bits, interpret=INTERPRET)
+    codes = codes[:total_blocks].reshape(lead + (n * bits // 8,))
+    scales = scales[:total_blocks, 0].reshape(lead + (nblk,))
+    return codes, scales
+
+
+def qpack_decode(codes: jnp.ndarray, scales: jnp.ndarray, bits: int = 4,
+                 block: int = 512, dtype=jnp.bfloat16) -> jnp.ndarray:
+    lead = scales.shape[:-1]
+    nblk = scales.shape[-1]
+    bp = block * bits // 8
+    total_blocks = int(jnp.prod(jnp.asarray(lead + (nblk,)))) if lead else nblk
+    pad = (-total_blocks) % _qp.TILE
+    c2 = codes.reshape(total_blocks, bp)
+    s2 = scales.reshape(total_blocks, 1)
+    if pad:
+        c2 = jnp.concatenate([c2, jnp.zeros((pad, bp), jnp.uint8)], axis=0)
+        s2 = jnp.concatenate([s2, jnp.ones((pad, 1), jnp.float32)], axis=0)
+    x = _qp.qpack_decode_2d(c2, s2, bits=bits, out_dtype=dtype,
+                            interpret=INTERPRET)
+    return x[:total_blocks].reshape(lead + (nblk * block,))
+
+
+def kvc_decode_attention(q, k_codes, k_scales, v_codes, v_scales, lengths, *,
+                         bits: int = 4, sm_scale: float | None = None,
+                         t_blk: int = 128) -> jnp.ndarray:
+    return _ka.kvc_decode_attention(
+        q, k_codes, k_scales, v_codes, v_scales, lengths, bits=bits,
+        sm_scale=sm_scale, t_blk=t_blk, interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None, tq: int = 128,
+                    tk: int = 128) -> jnp.ndarray:
+    return _fa.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                               tq=tq, tk=tk, interpret=INTERPRET)

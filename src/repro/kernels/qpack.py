@@ -1,0 +1,95 @@
+"""Pallas TPU kernels for the qpack block compression engine.
+
+The compression engine is the paper's per-device hot path (Fig. 3 steps 2-3).
+On TPU we replace the LZ77 sequential matcher with rate-adaptive quantization
+(DESIGN.md §3): a VPU-friendly reduction (block amax) + elementwise quantize +
+nibble pack. Tiling: ``TILE`` blocks per grid step; each block of ``B`` values
+is one VMEM row, hardware-aligned when B is a multiple of 128 (lane width).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 8  # blocks per grid step
+
+
+def _qmax(bits: int) -> float:
+    return float(2 ** (bits - 1) - 1)
+
+
+def _encode_kernel(x_ref, codes_ref, scales_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)                 # [TILE, B]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)  # [TILE, 1]
+    # reciprocal multiplies keep this bit-identical to the ref oracle
+    scale = jnp.where(amax > 0, amax * jnp.float32(1.0 / _qmax(bits)), 1.0)
+    recip = jnp.float32(1.0) / scale
+    q = jnp.clip(jnp.round(x * recip), -_qmax(bits) - 1, _qmax(bits))
+    q = q.astype(jnp.int32)
+    if bits == 4:
+        u = (q & 0xF).astype(jnp.uint8)
+        codes_ref[...] = u[:, 0::2] | (u[:, 1::2] << jnp.uint8(4))
+    else:
+        codes_ref[...] = (q & 0xFF).astype(jnp.uint8)
+    scales_ref[...] = scale
+
+
+def _decode_kernel(codes_ref, scales_ref, o_ref, *, bits: int):
+    c = codes_ref[...]                                  # [TILE, Bp]
+    scale = scales_ref[...]                             # [TILE, 1]
+    if bits == 4:
+        lo = (c & jnp.uint8(0xF)).astype(jnp.int32)
+        hi = (c >> jnp.uint8(4)).astype(jnp.int32)
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=-1).reshape(c.shape[0], c.shape[1] * 2)
+    else:
+        q = c.astype(jnp.int8).astype(jnp.int32)
+    o_ref[...] = (q.astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def qpack_encode_2d(x: jnp.ndarray, *, bits: int = 4,
+                    interpret: bool = True):
+    """x [N, B] -> (codes uint8[N, B*bits/8], scales f32[N, 1]).
+
+    N must be a multiple of TILE; B a multiple of 256 (nibble pairs stay
+    lane-aligned)."""
+    n, b = x.shape
+    assert n % TILE == 0 and b % 256 == 0, (n, b)
+    bp = b * bits // 8
+    grid = (n // TILE,)
+    codes, scales = pl.pallas_call(
+        functools.partial(_encode_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, b), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE, bp), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, bp), jnp.uint8),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return codes, scales
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "out_dtype", "interpret"))
+def qpack_decode_2d(codes: jnp.ndarray, scales: jnp.ndarray, *, bits: int = 4,
+                    out_dtype=jnp.bfloat16, interpret: bool = True):
+    """(codes uint8[N, Bp], scales f32[N, 1]) -> x [N, B]."""
+    n, bp = codes.shape
+    b = bp * 8 // bits
+    assert n % TILE == 0, n
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, bp), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), out_dtype),
+        interpret=interpret,
+    )(codes, scales)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel in this package must match its oracle to float tolerance across
+the shape/dtype sweeps in tests/test_kernels.py (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressor import dequantize_blocks, quantize_blocks
+
+
+def qpack_encode_ref(x: jnp.ndarray, bits: int, block: int):
+    """x[..., N] -> (codes uint8, scales f32[..., N/block])."""
+    return quantize_blocks(x, bits, block)
+
+
+def qpack_decode_ref(codes, scales, bits: int, block: int, dtype=jnp.bfloat16):
+    return dequantize_blocks(codes, scales, bits, block, dtype)
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, sm_scale: float | None = None,
+            lengths: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Reference attention. q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D] (GQA broadcast).
+
+    Returns [B,Sq,Hq,D] in q.dtype; accumulation in f32."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    if lengths is not None:
+        col = jnp.arange(Sk)[None, None, None, :]
+        s = jnp.where(col < lengths[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)
+
+
+def kvc_attn_ref(q: jnp.ndarray, k_codes, k_scales, v_codes, v_scales, *,
+                 bits: int, lengths: jnp.ndarray,
+                 sm_scale: float | None = None) -> jnp.ndarray:
+    """Decode attention over block-quantized KV (oracle = dequantize + mha).
+
+    q [B,Hq,D]; {k,v}_codes uint8 [B,S,Hkv,D*bits/8]; {k,v}_scales f32
+    [B,S,Hkv] (one block per (token, head): block == D)."""
+    B, S, Hkv, _ = k_codes.shape
+    D = q.shape[-1]
+    k = dequantize_blocks(k_codes, k_scales[..., None], bits, D)
+    v = dequantize_blocks(v_codes, v_scales[..., None], bits, D)
+    out = mha_ref(q[:, None], k, v, causal=False, sm_scale=sm_scale,
+                  lengths=lengths)
+    return out[:, 0]

@@ -1,0 +1,347 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# (No `from __future__ import` here — it would have to precede the XLA_FLAGS
+# lines, and nothing below needs it.)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent end-to-end:
+``jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)``
+must compile for the single-pod (16,16) mesh and the 2-pod (2,16,16) mesh.
+Outputs per cell: memory_analysis (fits?), cost_analysis (FLOPs/bytes),
+collective-bytes by op kind (parsed from HLO) -> results/dryrun/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common import sharding as SH
+from repro.common.types import (ALL_SHAPES, ModelConfig, OptimizerConfig,
+                                ServeConfig, ShapeConfig, SHAPES_BY_NAME,
+                                TrainConfig, replace)
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import mesh as M
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import trainer
+
+RESULTS_DIR = "results/dryrun"
+
+# hillclimb variant knobs (set by CLI; defaults = paper-faithful baseline)
+VARIANT = {
+    "paper_mode": False,        # serve: promote-then-read vs fused dequant
+    "microbatches": None,       # train: override grad-accum microbatches
+    "serve_replicate_params": False,  # decode/prefill: fsdp -> replicated
+    "kv_bits": 4,
+    "tag": "",
+}
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input.
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((B, S), jnp.int32),
+             "labels": _sds((B, S), jnp.int32)}
+    if cfg.frontend != "none":
+        specs["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def serve_cfg_for(cfg: ModelConfig, shape: ShapeConfig) -> ServeConfig:
+    # chunk must divide the per-shard sequence (long: 524288/32 = 16384)
+    chunk = 2048
+    return ServeConfig(hot_window=256, attn_chunk=chunk,
+                       kv_rate_bits=VARIANT["kv_bits"],
+                       fused_dequant_attention=not VARIANT["paper_mode"])
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct params tree, logical-axes tree) with no allocation —
+    init runs under eval_shape; the (static, string-leaved) axes tree escapes
+    via a side channel since eval_shape outputs must be arrays."""
+    box = {}
+
+    def f():
+        p, a = T.init_params(jax.random.PRNGKey(0), cfg)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["axes"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                tcfg: Optional[TrainConfig] = None) -> Dict[str, Any]:
+    """Abstract inputs for the lowered step of this cell (no allocation)."""
+    params = abstract_params(cfg)[0]
+    if shape.kind == "train":
+        tcfg = tcfg or train_cfg_for(cfg, shape)
+        opt = jax.eval_shape(lambda: adamw.init(params, tcfg.optimizer))
+        return {"params": params, "opt": opt,
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch_specs(cfg, shape)}
+    scfg = serve_cfg_for(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: D.init_cache(cfg, scfg, B, S))
+    specs = {"params": params, "cache": cache,
+             "tokens": _sds((B,), jnp.int32), "pos": _sds((B,), jnp.int32)}
+    if cfg.frontend != "none":
+        specs["embeds"] = _sds((B, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def train_cfg_for(cfg: ModelConfig, shape: ShapeConfig) -> TrainConfig:
+    # big models: bf16 moments keep optimizer HBM within a v5e (16GB)
+    big = cfg.param_count() > 3e10
+    mb = VARIANT["microbatches"]
+    return TrainConfig(
+        seq_len=shape.seq_len, global_batch=shape.global_batch,
+        microbatches=(mb if mb else 8) if shape.kind == "train" else 1,
+        optimizer=OptimizerConfig(
+            moment_dtype="bfloat16" if big else "float32"))
+
+
+# ---------------------------------------------------------------------------
+# Step builders (jit-with-shardings per cell).
+# ---------------------------------------------------------------------------
+
+def _axes_tree(tree_axes, mesh, rules):
+    return jax.tree_util.tree_map(
+        lambda axes: NamedSharding(
+            mesh, SH.logical_to_spec(axes, rules, mesh.axis_names)),
+        tree_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def _param_axes(cfg: ModelConfig):
+    return abstract_params(cfg)[1]
+
+
+def _model_size(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def make_train_lowerable(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    rules = M.rules_for(shape, mesh.axis_names, cfg, _model_size(mesh))
+    tcfg = train_cfg_for(cfg, shape)
+    axes = _param_axes(cfg)
+    fn, shardings = trainer.make_train_step(cfg, tcfg, mesh=mesh, rules=rules,
+                                            param_axes=axes)
+    specs = input_specs(cfg, shape, tcfg)
+    return fn, (specs["params"], specs["opt"], specs["batch"])
+
+
+def make_prefill_lowerable(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    rules = _maybe_replicate_serve(
+        M.rules_for(shape, mesh.axis_names, cfg, _model_size(mesh)))
+    scfg = serve_cfg_for(cfg, shape)
+    axes = _param_axes(cfg)
+    p_shard = _axes_tree(axes, mesh, rules)
+    bspec = NamedSharding(mesh, SH.logical_to_spec(("batch", "seq"), rules,
+                                                   mesh.axis_names))
+    bshard = {"tokens": bspec, "labels": bspec}
+    if cfg.frontend != "none":
+        bshard["embeds"] = NamedSharding(mesh, SH.logical_to_spec(
+            ("batch", "seq", "embed"), rules, mesh.axis_names))
+    cache_ax = D.cache_axes(cfg, scfg)
+    cache_shard = _axes_tree(cache_ax, mesh, rules)
+    logit_shard = NamedSharding(mesh, SH.logical_to_spec(
+        ("batch", "vocab"), rules, mesh.axis_names))
+
+    def step(params, batch):
+        return D.prefill(params, batch, cfg, scfg, max_len=shape.seq_len)
+
+    specs = input_specs(cfg, shape)
+    bsp = dict(specs["batch"])
+    bsp.pop("labels", None)
+    bshard.pop("labels", None)
+    fn = jax.jit(step, in_shardings=(p_shard, bshard),
+                 out_shardings=(logit_shard, cache_shard))
+    return fn, (specs["params"], bsp)
+
+
+def _maybe_replicate_serve(rules):
+    if not VARIANT["serve_replicate_params"]:
+        return rules
+    d = dict(rules)
+    d["fsdp"] = None
+    return tuple(d.items())
+
+
+def make_decode_lowerable(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    rules = _maybe_replicate_serve(
+        M.rules_for(shape, mesh.axis_names, cfg, _model_size(mesh)))
+    scfg = serve_cfg_for(cfg, shape)
+    axes = _param_axes(cfg)
+    p_shard = _axes_tree(axes, mesh, rules)
+    cache_shard = _axes_tree(D.cache_axes(cfg, scfg), mesh, rules)
+    tok_shard = NamedSharding(mesh, SH.logical_to_spec(
+        ("batch",), rules, mesh.axis_names))
+    logit_shard = NamedSharding(mesh, SH.logical_to_spec(
+        ("batch", "vocab"), rules, mesh.axis_names))
+    specs = input_specs(cfg, shape)
+    has_embeds = "embeds" in specs
+
+    if has_embeds:
+        emb_shard = NamedSharding(mesh, SH.logical_to_spec(
+            ("batch", "embed"), rules, mesh.axis_names))
+
+        def step(params, cache, tokens, pos, embeds):
+            return D.decode_step(params, cache, tokens, pos, cfg, scfg,
+                                 embeds=embeds)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, cache_shard, tok_shard, tok_shard,
+                                   emb_shard),
+                     out_shardings=(logit_shard, cache_shard))
+        args = (specs["params"], specs["cache"], specs["tokens"],
+                specs["pos"], specs["embeds"])
+    else:
+        def step(params, cache, tokens, pos):
+            return D.decode_step(params, cache, tokens, pos, cfg, scfg)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, cache_shard, tok_shard, tok_shard),
+                     out_shardings=(logit_shard, cache_shard))
+        args = (specs["params"], specs["cache"], specs["tokens"], specs["pos"])
+    return fn, args
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("long_500k requires sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (DESIGN.md skip)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Collective-byte extraction from HLO text.
+# ---------------------------------------------------------------------------
+
+from repro.roofline.analyze import collective_bytes_from_hlo  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = RESULTS_DIR) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = applicable(cfg, shape)
+    cell = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}" + \
+        (f"__{VARIANT['tag']}" if VARIANT["tag"] else "")
+    if not ok:
+        rec = {"cell": cell, "status": "skipped", "reason": why}
+        _write(out_dir, cell, rec)
+        return rec
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            fn, args = make_train_lowerable(cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            fn, args = make_prefill_lowerable(cfg, shape, mesh)
+        else:
+            fn, args = make_decode_lowerable(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        # collectives only exist in the post-SPMD module
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    rec = {
+        "cell": cell, "status": "ok", "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    _write(out_dir, cell, rec)
+    return rec
+
+
+def _write(out_dir: str, cell: str, rec: Dict[str, Any]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{cell}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--paper-mode", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--serve-replicate-params", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=4)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    VARIANT.update(paper_mode=args.paper_mode,
+                   microbatches=args.microbatches or None,
+                   serve_replicate_params=args.serve_replicate_params,
+                   kv_bits=args.kv_bits, tag=args.tag)
+
+    pods = []
+    if args.multi_pod or not args.single_pod:
+        pods.append(True)
+    if args.single_pod or not args.multi_pod:
+        pods.insert(0, False)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in ALL_SHAPES] if (args.all or not args.shape) \
+        else [args.shape]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                try:
+                    rec = run_cell(arch, shape, mp, args.out)
+                    status = rec["status"]
+                    extra = "" if status != "ok" else \
+                        f" flops={rec['flops']:.3g} compile={rec['compile_s']}s"
+                    print(f"[{status:7s}] {rec['cell']}{extra}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"[FAIL   ] {arch}__{shape}__"
+                          f"{'pod2' if mp else 'pod1'}: {e}", flush=True)
+                    traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

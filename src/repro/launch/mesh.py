@@ -1,0 +1,75 @@
+"""Production mesh construction + per-shape sharding rule tables.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — the 512-device dry-run
+sets XLA_FLAGS before any jax init, and smoke tests see the single real CPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+from repro.common import sharding as SH
+from repro.common.types import MeshConfig, ModelConfig, ShapeConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+# ---------------------------------------------------------------------------
+# Rule tables per shape kind (the hillclimb lever; see EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+
+TRAIN_RULES = SH.DEFAULT_RULES
+
+# decode: batch carries the data parallelism; KV seq local; heads on model.
+DECODE_RULES: Tuple[Tuple[str, object], ...] = tuple(
+    dict(SH.DEFAULT_RULES, **{
+        "batch": ("pod", "data"),
+        "kv_seq": None,
+    }).items())
+
+# long-context decode (global_batch=1): the *sequence* carries the data
+# parallelism — chunk-parallel attention partials merge via all-reduce.
+LONG_RULES: Tuple[Tuple[str, object], ...] = tuple(
+    dict(SH.DEFAULT_RULES, **{
+        "batch": None,
+        "kv_seq": ("pod", "data"),
+        "fsdp": None,              # batch=1: keep params on "model" only
+    }).items())
+
+
+def rules_for(shape: ShapeConfig, mesh_axes: Sequence[str],
+              cfg: Optional[ModelConfig] = None, model_size: int = 16):
+    if shape.kind == "train":
+        return TRAIN_RULES
+    base = LONG_RULES if shape.name.startswith("long") else DECODE_RULES
+    if cfg is None:
+        return base
+    # archs whose KV head count does not divide the model axis shard the KV
+    # *sequence* over "model" instead — the chunk-parallel decode attention
+    # merges per-shard partials with a small all-reduce either way.
+    kv_ok = cfg.attn_kind != "mla" and cfg.num_kv_heads % model_size == 0
+    if shape.kind != "train" and not kv_ok:
+        d = dict(base)
+        d["kv_heads"] = None
+        prev = d.get("kv_seq")
+        d["kv_seq"] = (prev or ()) + ("model",)
+        d["kv_hot"] = ("model",)   # ring W axis takes the model shards
+        return tuple(d.items())
+    return base
+
+
+def batch_shards(shape: ShapeConfig, mesh) -> int:
+    """How many ways the global batch is split on this mesh."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes.get("data", 1) * sizes.get("pod", 1)
+    return n

@@ -1,0 +1,124 @@
+"""Production training launcher: --arch selectable, mesh-aware, fault
+tolerant (retry-from-checkpoint), deterministic data replay.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3_8b --reduced \
+      --steps 50 --seq-len 128 --global-batch 8
+
+Full-scale flags mirror the dry-run cells; on this CPU container use
+--reduced (the full configs only lower/compile via repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.common.types import OptimizerConfig, TrainConfig
+from repro.configs import describe, get_config, get_reduced
+from repro.data.pipeline import make_batch
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import checkpoint as ckpt
+from repro.train import elastic
+from repro.train.trainer import make_train_step
+from repro.launch.mesh import make_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--compress-state", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--max-retries", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    print(describe(cfg))
+    tcfg = TrainConfig(
+        steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, microbatches=args.microbatches,
+        checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir or f"/tmp/repro_{args.arch}_ckpt",
+        optimizer=OptimizerConfig(lr=args.lr, warmup_steps=20,
+                                  compress_state=args.compress_state))
+
+    n_dev = len(jax.devices())
+    mesh = None
+    shardings = None
+    box = {}
+
+    def init():
+        p, a = T.init_params(jax.random.PRNGKey(tcfg.seed), cfg)
+        box["axes"] = a
+        return p
+
+    params = init()
+    opt = adamw.init(params, tcfg.optimizer)
+    if n_dev > 1:
+        mesh = make_mesh(elastic.plan_mesh(n_dev, prefer_model=2))
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    step_fn, shardings = make_train_step(cfg, tcfg, mesh=mesh,
+                                         param_axes=box.get("axes"))
+    if shardings is not None:
+        params = jax.device_put(params, shardings["params"])
+        opt = jax.device_put(opt, shardings["opt"])
+
+    start = 0
+    latest = ckpt.latest(tcfg.checkpoint_dir)
+    if latest is not None:
+        tree, _ = ckpt.restore(tcfg.checkpoint_dir, latest,
+                               {"params": params, "opt": opt},
+                               None if shardings is None else
+                               {"params": shardings["params"],
+                                "opt": shardings["opt"]})
+        params, opt = tree["params"], tree["opt"]
+        start = latest
+        print(f"resumed from step {latest}")
+
+    retries = 0
+    step = start
+    t0 = time.time()
+    while step < tcfg.steps:
+        try:
+            batch = make_batch(cfg, step, global_batch=tcfg.global_batch,
+                               seq_len=tcfg.seq_len)
+            if shardings is not None:
+                batch = {k: jax.device_put(v, shardings["batch"].get(
+                    k, shardings["batch"]["tokens"]))
+                    for k, v in batch.items()}
+            params, opt, metrics = step_fn(params, opt, batch)
+            if step % 10 == 0 or step == tcfg.steps - 1:
+                dt = (time.time() - t0) / max(step - start + 1, 1)
+                print(f"step {step:4d}  loss={float(metrics['loss']):.4f}  "
+                      f"gnorm={float(metrics['grad_norm']):.3f}  "
+                      f"{dt * 1e3:.0f} ms/step", flush=True)
+            if (step + 1) % tcfg.checkpoint_every == 0:
+                ckpt.save_async(tcfg.checkpoint_dir, step + 1,
+                                {"params": params, "opt": opt},
+                                keep=tcfg.keep_checkpoints)
+            step += 1
+        except Exception as e:   # step-level retry from the last checkpoint
+            retries += 1
+            if retries > args.max_retries:
+                raise
+            print(f"step {step} failed ({e}); retrying from last checkpoint")
+            latest = ckpt.latest(tcfg.checkpoint_dir)
+            if latest is not None:
+                tree, _ = ckpt.restore(tcfg.checkpoint_dir, latest,
+                                       {"params": params, "opt": opt})
+                params, opt = tree["params"], tree["opt"]
+                step = latest
+    ckpt.wait_pending()
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

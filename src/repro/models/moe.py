@@ -1,0 +1,163 @@
+"""Mixture-of-Experts layer (qwen3-moe: 128e top-8; arctic: 128e top-2 +
+dense residual).
+
+Sort-based capacity dispatch (the production TPU pattern): tokens are grouped
+by expert with a single argsort, truncated at capacity C = ceil(k*N/E * cf),
+processed as one [E, C, D] batched einsum (experts sharded on the "expert"
+logical axis -> EP over "model"), and gathered back differentiably. No
+[N, E, C] one-hot tensors are ever materialized."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig, MoEConfig
+from repro.models.layers import _init, mlp_apply, mlp_init
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_init(key, cfg: ModelConfig) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    mo = cfg.moe or MoEConfig()
+    d, f, e = cfg.d_model, mo.expert_d_ff, mo.num_experts
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": _init(ks[0], (d, e), scale=0.02),
+        "wi": _init(ks[1], (e, d, f)),
+        "wg": _init(ks[2], (e, d, f)),
+        "wo": _init(ks[3], (e, f, d), scale=1.0 / (f ** 0.5)),
+    }
+    axes = {"router": ("fsdp", None), "wi": ("expert", "fsdp", "expert_mlp"),
+            "wg": ("expert", "fsdp", "expert_mlp"),
+            "wo": ("expert", "expert_mlp", "fsdp")}
+    if mo.dense_residual:
+        dp, da = mlp_init(ks[4], d, mo.dense_d_ff or cfg.d_ff)
+        params["dense"] = dp
+        axes["dense"] = da
+    return params, axes
+
+
+GROUP_TOKENS = 512   # grouped dispatch: tokens per routing group
+
+
+def moe_apply_grouped(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard-style grouped einsum dispatch (the GSPMD-native pattern).
+
+    Tokens are viewed as [G, Sg, D] groups (G inherits the batch sharding);
+    dispatch/combine are one-hot [G, Sg, E, C] tensors contracted with
+    einsums, so the data->expert movement lowers to a clean all-to-all
+    instead of the replicating gathers that index-based dispatch costs under
+    GSPMD (§Perf cell C: the sort-based path moved ~8x more collective
+    bytes). Dispatch-matmul overhead is ~2*k*Sg*cf/d of the expert compute
+    (~4% for arctic at Sg=512). Tokens beyond per-group capacity
+    C = ceil(k*Sg*cf/E) are dropped (standard GShard semantics)."""
+    mo = cfg.moe or MoEConfig()
+    B, S, d = x.shape
+    e, k = mo.num_experts, mo.top_k
+    n = B * S
+    sg = min(GROUP_TOKENS, n)
+    g = n // sg
+    cap = max(1, int(-(-(k * sg * CAPACITY_FACTOR) // e)))
+
+    xg = x.reshape(g, sg, d)
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [G,Sg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                           # [G,Sg,k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    dispatch = jnp.zeros((g, sg, e, cap), jnp.bool_)
+    combine = jnp.zeros((g, sg, e, cap), jnp.float32)
+    # running per-(group, expert) fill count threads the k choices
+    fill = jnp.zeros((g, e), jnp.int32)
+    for j in range(k):
+        oh = jax.nn.one_hot(top_i[..., j], e, dtype=jnp.int32)       # [G,Sg,E]
+        pos = fill[:, None, :] + jnp.cumsum(oh, axis=1) - oh         # excl.
+        keep = (oh > 0) & (pos < cap)
+        cslot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                               dtype=jnp.float32)[..., :cap]         # [G,Sg,E,C]
+        sel = keep[..., None] & (cslot > 0)
+        dispatch = dispatch | sel
+        combine = combine + top_p[..., j][..., None, None] * sel
+        fill = fill + jnp.sum(oh, axis=1)
+
+    dsp = dispatch.astype(x.dtype)
+    xe = jnp.einsum("gsec,gsd->egcd", dsp, xg)                       # [E,G,C,D]
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["wg"].astype(x.dtype))) \
+        * jnp.einsum("egcd,edf->egcf", xe, p["wi"].astype(x.dtype))
+    ye = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(x.dtype))
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), ye)
+    out = out.reshape(B, S, d)
+
+    if mo.dense_residual and "dense" in p:
+        out = out + mlp_apply(p["dense"], x)
+    frac = jnp.mean(dispatch.any(-1).astype(jnp.float32), axis=(0, 1))
+    mprob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(frac * mprob) * e * mo.load_balance_coef
+    return out, aux
+
+
+def moe_apply(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,D] -> (out [B,S,D], aux load-balance loss scalar).
+
+    Dispatches to the grouped einsum path for multi-token inputs (the
+    distributed-friendly default); single-token decode keeps the sort-based
+    path (tiny n, no dispatch-matmul overhead)."""
+    B, S, _ = x.shape
+    if B * S >= 2 * GROUP_TOKENS:
+        return moe_apply_grouped(p, x, cfg)
+    return moe_apply_sorted(p, x, cfg)
+
+
+def moe_apply_sorted(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based capacity dispatch (single-host / decode path)."""
+    mo = cfg.moe or MoEConfig()
+    B, S, d = x.shape
+    e, k = mo.num_experts, mo.top_k
+    n = B * S
+    cap = max(1, int(-(-(k * n * CAPACITY_FACTOR) // e)))
+
+    xf = x.reshape(n, d)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [N,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                           # [N,k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # group (token, choice) pairs by expert
+    flat_e = top_i.reshape(n * k)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_e)
+    sort_e = flat_e[order]
+    sort_tok = flat_tok[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(n * k) - starts[sort_e]
+    keep = pos < cap
+    slot = jnp.where(keep, sort_e * cap + pos, e * cap)  # drop slot = e*cap
+
+    # dispatch: xe [E*C+1, D] (last row is the drop bin)
+    xe = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].add(xf[sort_tok])
+    xe = xe[:-1].reshape(e, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(x.dtype))) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(x.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+
+    # gather back (unsort) with routing weights; dropped pairs contribute 0
+    ye_flat = jnp.concatenate([ye.reshape(e * cap, d),
+                               jnp.zeros((1, d), x.dtype)], axis=0)
+    contrib = ye_flat[slot]                                           # [N*k, D]
+    unsorted = jnp.zeros((n * k, d), x.dtype).at[order].set(contrib)
+    w = top_p.reshape(n, k).astype(x.dtype)
+    out = jnp.einsum("nkd,nk->nd", unsorted.reshape(n, k, d), w).reshape(B, S, d)
+
+    if mo.dense_residual and "dense" in p:
+        out = out + mlp_apply(p["dense"], x)
+    # switch-style aux loss over the *routed* (pre-drop) assignment
+    frac = counts.astype(jnp.float32) / (n * k)
+    mprob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(frac * mprob) * e * mo.load_balance_coef
+    return out, aux

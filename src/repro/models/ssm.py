@@ -1,0 +1,303 @@
+"""Selective state-space layers: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+Prefill/training uses a chunked scan: lax.scan over time chunks carrying the
+[.., d, N] state, with an associative scan inside each chunk — O(chunk) live
+memory, exact, differentiable. Decode is the O(1)-state recurrence (these
+archs have *no KV cache*; see DESIGN.md §4 arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig, SSMConfig
+from repro.models.layers import _init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv. x [B,T,C], w [C,K], b [C]. init_state [B,K-1,C]
+    supplies the left context (decode); zeros otherwise."""
+    B, T, C = x.shape
+    K = w.shape[1]
+    if init_state is None:
+        init_state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i:i + T].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _chunked_ssm_scan(decay: jnp.ndarray, inp: jnp.ndarray, h0: jnp.ndarray,
+                      chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = decay_t * h_{t-1} + inp_t along axis 1 (time).
+
+    decay/inp [B, T, ...]; h0 [B, ...]. Returns (h_all [B,T,...], h_T).
+
+    NOTE: materializes the full state history — use only for short T
+    (decode steps). Prefill/training must use ``_chunked_ssm_scan_out``,
+    which keeps the [chunk, ..., N] states VMEM-transient (§Perf cell B:
+    this was the single largest memory-roofline term in the baseline)."""
+    B, T = inp.shape[0], inp.shape[1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+    dc = decay.reshape((B, nc, chunk) + decay.shape[2:]).swapaxes(0, 1)
+    ic = inp.reshape((B, nc, chunk) + inp.shape[2:]).swapaxes(0, 1)
+
+    def combine(a, b):
+        (da, ia), (db, ib) = a, b
+        return da * db, db * ia + ib
+
+    def body(h, xs):
+        d, i = xs                                   # [B, chunk, ...]
+        dd, ii = jax.lax.associative_scan(combine, (d, i), axis=1)
+        h_all = dd * h[:, None] + ii
+        return h_all[:, -1], h_all
+
+    hT, h_all = jax.lax.scan(body, h0, (dc, ic))
+    h_all = h_all.swapaxes(0, 1).reshape((B, T) + inp.shape[2:])
+    return h_all, hT
+
+
+def _chunked_ssm_scan_out(ins, h0: jnp.ndarray, make_decay_inp, contract,
+                          chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked selective scan that keeps every [.., N]-expanded tensor
+    chunk-local: per chunk, ``decay, inp = make_decay_inp(ins_chunk)`` builds
+    the [B, chunk, ..., N] recurrence operands (the dt*x (x) B outer product
+    included — materializing it for the full T was the baseline's largest
+    memory-roofline term, §Perf cell B), the state recurrence runs as an
+    associative scan, and ``y_chunk = contract(h_chunk, ins_chunk)`` reduces
+    N away before anything returns to HBM. The scan emits [B, T, out...].
+
+    ins: pytree of [B, T, ...] per-timestep tensors; h0 [B, ..., N]."""
+    leaves = jax.tree_util.tree_leaves(ins)
+    B, T = leaves[0].shape[0], leaves[0].shape[1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+    resh = lambda a: a.reshape((B, nc, chunk) + a.shape[2:]).swapaxes(0, 1)
+    ins_c = jax.tree_util.tree_map(resh, ins)
+
+    def combine(a, b):
+        (da, ia), (db, ib) = a, b
+        return da * db, db * ia + ib
+
+    def body(h, xs):
+        d, i = make_decay_inp(xs)
+        dd, ii = jax.lax.associative_scan(combine, (d, i), axis=1)
+        h_all = dd * h[:, None] + ii                # [B, chunk, ..., N]
+        return h_all[:, -1], contract(h_all, xs)
+
+    hT, ys = jax.lax.scan(body, h0, ins_c)
+    ys = ys.swapaxes(0, 1).reshape((B, T) + ys.shape[3:])
+    return ys, hT
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+class Mamba1State(NamedTuple):
+    h: jnp.ndarray        # [B, d_in, N]
+    conv: jnp.ndarray     # [B, K-1, d_in]
+
+
+def mamba1_init(key, cfg: ModelConfig) -> Tuple[Params, Dict[str, Any]]:
+    ssm = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in = ssm.expand * d
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": _init(ks[0], (d, 2 * d_in)),
+        "conv_w": _init(ks[1], (d_in, ssm.d_conv), scale=0.5),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": _init(ks[2], (d_in, r + 2 * ssm.d_state)),
+        "dt_proj": _init(ks[3], (r, d_in), scale=r ** -0.5),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ssm.d_state + 1,
+                                             dtype=jnp.float32), (d_in, 1))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _init(ks[4], (d_in, d), scale=d_in ** -0.5),
+    }
+    axes = {"in_proj": ("fsdp", "mlp"), "conv_w": ("mlp", None),
+            "conv_b": ("mlp",), "x_proj": ("mlp", None),
+            "dt_proj": (None, "mlp"), "dt_bias": ("mlp",),
+            "A_log": ("mlp", "state"), "D": ("mlp",),
+            "out_proj": ("mlp", "fsdp")}
+    return params, axes
+
+
+def _mamba1_core(p: Params, xconv: jnp.ndarray, z: jnp.ndarray,
+                 h0: jnp.ndarray, cfg: ModelConfig,
+                 return_all: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    ssm = cfg.ssm or SSMConfig()
+    r = _dt_rank(cfg)
+    dbc = xconv @ p["x_proj"].astype(xconv.dtype)
+    dt, Bc, Cc = jnp.split(dbc, [r, r + ssm.d_state], axis=-1)
+    dt = jax.nn.softplus((dt @ p["dt_proj"].astype(xconv.dtype))
+                         .astype(jnp.float32) + p["dt_bias"])     # [B,T,d_in]
+    A = -jnp.exp(p["A_log"])                                      # [d_in, N]
+
+    # decay/inp built per chunk; C contracted per chunk: nothing [T, d, N]
+    # ever reaches HBM (§Perf cell B)
+    def make_di(xs):
+        dtc, xc, bc, _ = xs
+        decay = jnp.exp(dtc[..., None] * A)                       # [B,c,d,N]
+        inp = (dtc * xc.astype(jnp.float32))[..., None] * \
+            bc.astype(jnp.float32)[:, :, None, :]
+        return decay, inp
+
+    y, hT = _chunked_ssm_scan_out(
+        (dt, xconv, Bc, Cc.astype(jnp.float32)), h0, make_di,
+        lambda h, xs: jnp.einsum("btdn,btn->btd", h, xs[3]), ssm.chunk)
+    y = y + p["D"] * xconv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xconv.dtype)
+    return y @ p["out_proj"].astype(xconv.dtype), hT
+
+
+def mamba1_apply_train(p: Params, u: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    ssm = cfg.ssm or SSMConfig()
+    B, T, _ = u.shape
+    d_in = ssm.expand * cfg.d_model
+    xz = u @ p["in_proj"].astype(u.dtype)
+    x, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(x, p["conv_w"], p["conv_b"])
+    h0 = jnp.zeros((B, d_in, ssm.d_state), jnp.float32)
+    y, _ = _mamba1_core(p, xc, z, h0, cfg, return_all=True)
+    return y
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int) -> Mamba1State:
+    ssm = cfg.ssm or SSMConfig()
+    d_in = ssm.expand * cfg.d_model
+    return Mamba1State(
+        h=jnp.zeros((batch, d_in, ssm.d_state), jnp.float32),
+        conv=jnp.zeros((batch, ssm.d_conv - 1, d_in), jnp.bfloat16))
+
+
+def mamba1_decode(p: Params, u: jnp.ndarray, state: Mamba1State,
+                  cfg: ModelConfig) -> Tuple[jnp.ndarray, Mamba1State]:
+    """u [B,1,d] one token. O(1) state update."""
+    xz = u @ p["in_proj"].astype(u.dtype)
+    x, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(x, p["conv_w"], p["conv_b"], init_state=state.conv)
+    y, hT = _mamba1_core(p, xc, z, state.h, cfg, return_all=False)
+    new_conv = jnp.concatenate([state.conv[:, 1:], x.astype(state.conv.dtype)],
+                               axis=1)
+    return y, Mamba1State(h=hT, conv=new_conv)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, scalar decay per head)
+# ---------------------------------------------------------------------------
+
+class Mamba2State(NamedTuple):
+    h: jnp.ndarray        # [B, H, P, N]
+    conv: jnp.ndarray     # [B, K-1, d_in]
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Tuple[Params, Dict[str, Any]]:
+    ssm = cfg.ssm or SSMConfig(kind="mamba2")
+    d = cfg.d_model
+    d_in = ssm.expand * d
+    nheads = d_in // ssm.headdim
+    g, n = ssm.ngroups, ssm.d_state
+    ks = jax.random.split(key, 4)
+    params = {
+        "in_proj": _init(ks[0], (d, 2 * d_in + 2 * g * n + nheads)),
+        "conv_w": _init(ks[1], (d_in, ssm.d_conv), scale=0.5),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "dt_bias": jnp.full((nheads,), -4.6, jnp.float32),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _init(ks[2], (d_in, d), scale=d_in ** -0.5),
+    }
+    axes = {"in_proj": ("fsdp", "mlp"), "conv_w": ("mlp", None),
+            "conv_b": ("mlp",), "dt_bias": (None,), "A_log": (None,),
+            "D": (None,), "norm_w": ("mlp",), "out_proj": ("mlp", "fsdp")}
+    return params, axes
+
+
+def _mamba2_core(p: Params, xc, Bc, Cc, dt, z, h0, cfg: ModelConfig):
+    ssm = cfg.ssm or SSMConfig(kind="mamba2")
+    B_, T, d_in = xc.shape
+    H = d_in // ssm.headdim
+    P, N, g = ssm.headdim, ssm.d_state, ssm.ngroups
+    xh = xc.reshape(B_, T, H, P).astype(jnp.float32)
+    Bg = Bc.reshape(B_, T, g, N).astype(jnp.float32)
+    Cg = Cc.reshape(B_, T, g, N).astype(jnp.float32)
+    rep = H // g
+    Bh = jnp.repeat(Bg, rep, axis=2)                   # [B,T,H,N]
+    Ch = jnp.repeat(Cg, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+    A = -jnp.exp(p["A_log"])                                     # [H]
+
+    # decay/inp built per chunk; C contracted per chunk (§Perf cell B):
+    # the [T, H, P, N] outer product never reaches HBM
+    def make_di(xs):
+        dtc, xc, bc, _ = xs
+        decay = jnp.exp(dtc * A)[..., None, None]                # [B,c,H,1,1]
+        inp = (dtc[..., None] * xc)[..., None] * bc[:, :, :, None, :]
+        return decay, inp
+
+    y, hT = _chunked_ssm_scan_out(
+        (dt, xh, Bh, Ch), h0, make_di,
+        lambda h, xs: jnp.einsum("bthpn,bthn->bthp", h, xs[3]), ssm.chunk)
+    y = y + p["D"][:, None] * xh                                 # [B,T,H,P]
+    y = y.reshape(B_, T, d_in)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(xc.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(xc.dtype), hT
+
+
+def _mamba2_split(p: Params, u: jnp.ndarray, cfg: ModelConfig):
+    ssm = cfg.ssm or SSMConfig(kind="mamba2")
+    d_in = ssm.expand * cfg.d_model
+    g, n = ssm.ngroups, ssm.d_state
+    nheads = d_in // ssm.headdim
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    return jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + g * n,
+                              2 * d_in + 2 * g * n], axis=-1)  # z,x,B,C,dt
+
+
+def mamba2_apply_train(p: Params, u: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    ssm = cfg.ssm or SSMConfig(kind="mamba2")
+    B_, T, _ = u.shape
+    d_in = ssm.expand * cfg.d_model
+    H = d_in // ssm.headdim
+    z, x, Bc, Cc, dt = _mamba2_split(p, u, cfg)
+    xc = _causal_conv(x, p["conv_w"], p["conv_b"])
+    h0 = jnp.zeros((B_, H, ssm.headdim, ssm.d_state), jnp.float32)
+    y, _ = _mamba2_core(p, xc, Bc, Cc, dt, z, h0, cfg)
+    return y
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int) -> Mamba2State:
+    ssm = cfg.ssm or SSMConfig(kind="mamba2")
+    d_in = ssm.expand * cfg.d_model
+    H = d_in // ssm.headdim
+    return Mamba2State(
+        h=jnp.zeros((batch, H, ssm.headdim, ssm.d_state), jnp.float32),
+        conv=jnp.zeros((batch, ssm.d_conv - 1, d_in), jnp.bfloat16))
+
+
+def mamba2_decode(p: Params, u: jnp.ndarray, state: Mamba2State,
+                  cfg: ModelConfig) -> Tuple[jnp.ndarray, Mamba2State]:
+    z, x, Bc, Cc, dt = _mamba2_split(p, u, cfg)
+    xc = _causal_conv(x, p["conv_w"], p["conv_b"], init_state=state.conv)
+    y, hT = _mamba2_core(p, xc, Bc, Cc, dt, z, state.h, cfg)
+    new_conv = jnp.concatenate([state.conv[:, 1:], x.astype(state.conv.dtype)],
+                               axis=1)
+    return y, Mamba2State(h=hT, conv=new_conv)

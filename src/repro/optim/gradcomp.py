@@ -1,0 +1,77 @@
+"""Error-feedback int8 gradient compression for the DP all-reduce.
+
+Distributed-optimization trick (beyond-paper #2, DESIGN.md §5): the data-
+parallel all-reduce moves int8 codes + per-block f32 scales instead of f32
+gradients — ~3.9x fewer bytes on the interconnect (the collective roofline
+term). The per-device quantization residual is carried into the next step
+(error feedback), which keeps SGD/Adam convergence unbiased to first order
+[Seide et al. 2014; Karimireddy et al. 2019].
+
+Usage inside a shard_map'd train step:
+    g_q, new_residual = compress_with_feedback(g, residual, block)
+    g_mean = psum(decompress(g_q)) / ndev        # or all-reduce the codes
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressor import dequantize_blocks, quantize_blocks
+
+Tree = Any
+
+
+def _block_for(n: int, block: int) -> int:
+    return block if n % block == 0 and n >= block else n
+
+
+def compress_leaf(g: jnp.ndarray, block: int):
+    flat = g.astype(jnp.float32).reshape(-1)
+    b = _block_for(flat.shape[0], block)
+    codes, scales = quantize_blocks(flat, 8, b)
+    return {"codes": codes, "scales": scales}
+
+
+def decompress_leaf(c, shape, block: int) -> jnp.ndarray:
+    n = 1
+    for s in shape:
+        n *= s
+    b = _block_for(n, block)
+    return dequantize_blocks(c["codes"], c["scales"], 8, b,
+                             jnp.float32).reshape(shape)
+
+
+def compress_with_feedback(grads: Tree, residual: Tree, block: int = 512
+                           ) -> Tuple[Tree, Tree]:
+    """Returns (quantized grads tree, new residual tree)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        c = compress_leaf(corrected, block)
+        back = decompress_leaf(c, g.shape, block)
+        return c, corrected - back
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return treedef.unflatten([o[0] for o in out]), \
+        treedef.unflatten([o[1] for o in out])
+
+
+def decompress(qgrads: Tree, like: Tree, block: int = 512) -> Tree:
+    flat_q, treedef = jax.tree_util.tree_flatten(
+        qgrads, is_leaf=lambda x: isinstance(x, dict) and "codes" in x)
+    flat_l = treedef.flatten_up_to(like)
+    return treedef.unflatten(
+        [decompress_leaf(q, l.shape, block) for q, l in zip(flat_q, flat_l)])
+
+
+def init_residual(params: Tree) -> Tree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_bytes(qgrads: Tree) -> int:
+    import numpy as np
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(qgrads))

@@ -1,0 +1,251 @@
+"""Continuous-batching serving engine with IBEX-managed KV residency.
+
+The engine is the request-granular face of the paper's pool:
+
+  * running requests occupy decode *lanes* (batch slots of the jit'd
+    decode_step) — their recent tokens sit uncompressed in the hot ring
+    (promoted region), older tokens in the quantized region;
+  * a **preempted** request is *demoted*: its hot ring is quantized into the
+    codes region (always a clean demotion — KV is append-only, the compressed
+    copy is the only copy needed) and the lane is freed;
+  * **resume** is a promotion — and because decode reads compressed pages
+    directly (fused dequant attention), promotion moves *zero* KV bytes: the
+    lane just adopts the parked codes (cold_len = full length, empty ring).
+    This is the serving-level payoff of the paper's shadowed-promotion idea
+    taken to its limit for append-only data;
+  * victim selection uses a second-chance sweep over lanes (reference bit =
+    "generated a token since last sweep"), the paper's §4.4 policy at
+    request granularity.
+
+Scheduling: FIFO admission, optional round-robin quantum. All cache motion is
+counted in ``self.counters`` (bytes and events) for benchmarks/fig_serve.py.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import ModelConfig, ServeConfig
+from repro.models import decode as D
+from repro.models import transformer as T
+
+WAITING, RUNNING, PREEMPTED, DONE = "waiting", "running", "preempted", "done"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    state: str = WAITING
+    generated: List[int] = field(default_factory=list)
+    lane: int = -1
+    pos: int = 0                      # next position to write
+    parked: Optional[Dict[str, np.ndarray]] = None   # demoted KV (codes only)
+    ref_bit: bool = True              # second-chance reference bit
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_steps(cfg: ModelConfig, scfg: ServeConfig, max_len: int):
+    """Engine-shared jitted step/prefill fns. Cached on the hashable configs
+    so constructing N engines (tests, replicas) compiles once — a fresh
+    functools.partial per engine would key a fresh jit cache entry and
+    recompile everything."""
+    step = jax.jit(functools.partial(D.decode_step, cfg=cfg, scfg=scfg))
+    prefill = jax.jit(functools.partial(D.prefill, cfg=cfg, scfg=scfg,
+                                        max_len=max_len))
+    return step, prefill
+
+
+def _lane_slice(cache, lane: int):
+    """Extract one lane's cache (arrays indexed at batch axis 1)."""
+    return jax.tree_util.tree_map(lambda a: a[:, lane], cache)
+
+
+def _lane_install(cache, lane: int, lane_cache):
+    return jax.tree_util.tree_map(
+        lambda a, s: a.at[:, lane].set(s.astype(a.dtype)), cache, lane_cache)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
+                 max_len: int = 2048, seed: int = 0):
+        self.cfg, self.scfg = cfg, scfg
+        self.params = params
+        self.max_len = max_len
+        self.lanes = scfg.max_running
+        self.cache = D.init_cache(cfg, scfg, self.lanes, max_len)
+        self.lane_req: List[Optional[int]] = [None] * self.lanes
+        self.requests: Dict[int, Request] = {}
+        self.queue: List[int] = []
+        self._next_rid = 0
+        self._sweep_hand = 0
+        self.counters = {"promotions": 0, "demotions": 0, "preempt_bytes": 0,
+                         "resume_bytes": 0, "steps": 0, "tokens": 0}
+        self._step_fn, self._prefill_fn = _compiled_steps(cfg, scfg, max_len)
+
+    # -- client API ---------------------------------------------------------
+
+    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = Request(rid, list(prompt), max_new_tokens)
+        self.queue.append(rid)
+        return rid
+
+    def result(self, rid: int) -> List[int]:
+        return self.requests[rid].generated
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.step():
+                return
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _free_lane(self) -> Optional[int]:
+        for i, r in enumerate(self.lane_req):
+            if r is None:
+                return i
+        return None
+
+    def _second_chance_victim(self) -> Optional[int]:
+        """Clock sweep over lanes: clear ref bits, pick first un-referenced."""
+        for _ in range(2 * self.lanes):
+            lane = self._sweep_hand
+            self._sweep_hand = (self._sweep_hand + 1) % self.lanes
+            rid = self.lane_req[lane]
+            if rid is None:
+                continue
+            req = self.requests[rid]
+            if req.ref_bit:
+                req.ref_bit = False
+            else:
+                return lane
+        # all referenced: round-robin fallback (the paper's random fallback)
+        for off in range(self.lanes):
+            lane = (self._sweep_hand + off) % self.lanes
+            if self.lane_req[lane] is not None:
+                return lane
+        return None
+
+    def _admit(self) -> None:
+        # fill free lanes first
+        while self.queue:
+            lane = self._free_lane()
+            if lane is None:
+                break
+            self._start(self.queue.pop(0), lane)
+        # time-slicing: at most ONE preemption per engine step — the evicted
+        # request rejoins the queue tail and waits its turn. (An unbounded
+        # preempt-while-queue-nonempty loop never terminates: every
+        # preemption re-fills the queue it is trying to drain.)
+        if self.queue:
+            lane = self._second_chance_victim()
+            if lane is not None:
+                self._preempt(lane)
+                self._start(self.queue.pop(0), lane)
+
+    def _start(self, rid: int, lane: int) -> None:
+        req = self.requests[rid]
+        if req.parked is not None:
+            self._resume(req, lane)
+            return
+        # fresh request: single-lane prefill, then install codes+ring
+        prompt = np.asarray(req.prompt, np.int32)[None, :]
+        S = prompt.shape[1]
+        W = self.scfg.hot_window
+        if S < W:   # pad short prompts to the ring size
+            prompt = np.pad(prompt, ((0, 0), (W - S, 0)))
+            S = W
+        batch = {"tokens": jnp.asarray(prompt)}
+        if self.cfg.frontend != "none":
+            batch["embeds"] = jnp.zeros((1, S, self.cfg.d_model), jnp.bfloat16)
+        logits, lane_cache = self._prefill_fn(self.params, batch)
+        lane_cache = jax.tree_util.tree_map(lambda a: a[:, 0], lane_cache)
+        self.cache = _lane_install(self.cache, lane, lane_cache)
+        req.pos = S
+        req.lane = lane
+        req.state = RUNNING
+        req.ref_bit = True
+        self.lane_req[lane] = rid
+        tok = int(jnp.argmax(logits[0]))
+        req.generated.append(tok)
+        self.counters["promotions"] += 1
+
+    def _preempt(self, lane: int) -> None:
+        """Demote: the lane's ring tokens are already quantized on aging; the
+        remainder (the ring itself) is quantized here — a clean demotion."""
+        rid = self.lane_req[lane]
+        req = self.requests[rid]
+        lane_cache = _lane_slice(self.cache, lane)
+        parked = {}
+        host = jax.tree_util.tree_map(np.asarray, lane_cache)
+        parked["cache"] = host
+        req.parked = parked
+        bytes_moved = sum(a.nbytes for a in jax.tree_util.tree_leaves(host)
+                          if a.dtype == np.uint8)   # codes only: clean demote
+        self.counters["preempt_bytes"] += bytes_moved
+        self.counters["demotions"] += 1
+        req.state = PREEMPTED
+        req.lane = -1
+        self.lane_req[lane] = None
+        self.queue.append(rid)
+
+    def _resume(self, req: Request, lane: int) -> None:
+        """Promotion: install parked codes; no decompression happens (fused
+        attention reads codes directly) — zero KV bytes dequantized."""
+        lane_cache = jax.tree_util.tree_map(jnp.asarray, req.parked["cache"])
+        self.cache = _lane_install(self.cache, lane, lane_cache)
+        self.counters["resume_bytes"] += sum(
+            a.nbytes for a in jax.tree_util.tree_leaves(req.parked["cache"])
+            if a.dtype == np.uint8)
+        self.counters["promotions"] += 1
+        req.parked = None
+        req.lane = lane
+        req.state = RUNNING
+        req.ref_bit = True
+        self.lane_req[lane] = req.rid
+
+    # -- decode step ---------------------------------------------------------
+
+    def step(self) -> bool:
+        """One engine iteration. Returns False when no work remains."""
+        self._admit()
+        active = [(lane, rid) for lane, rid in enumerate(self.lane_req)
+                  if rid is not None]
+        if not active:
+            return bool(self.queue)
+        tokens = np.zeros((self.lanes,), np.int32)
+        pos = np.zeros((self.lanes,), np.int32)
+        for lane, rid in active:
+            req = self.requests[rid]
+            tokens[lane] = req.generated[-1] if req.generated else 0
+            pos[lane] = req.pos
+        kwargs = {}
+        if self.cfg.frontend != "none":
+            kwargs["embeds"] = jnp.zeros((self.lanes, self.cfg.d_model),
+                                         jnp.bfloat16)
+        logits, self.cache = self._step_fn(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
+            **kwargs)
+        self.counters["steps"] += 1
+        logits = np.asarray(logits)
+        for lane, rid in active:
+            req = self.requests[rid]
+            req.pos += 1
+            req.ref_bit = True
+            tok = int(np.argmax(logits[lane]))
+            req.generated.append(tok)
+            self.counters["tokens"] += 1
+            if len(req.generated) >= req.max_new_tokens or \
+                    req.pos >= self.max_len - 1:
+                req.state = DONE
+                req.lane = -1
+                self.lane_req[lane] = None
+        return True

@@ -1,0 +1,2 @@
+"""Layer B: trace-driven reproduction of the paper's SST evaluation."""
+from repro.simx import device, engine, trace  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.train import checkpoint, elastic, trainer  # noqa: F401

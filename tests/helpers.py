@@ -1,0 +1,88 @@
+"""Test helpers: pool invariant checker (DESIGN.md §9, pool.py I1-I5)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.common.types import PoolConfig
+from repro.core import freelist as fl
+from repro.core import metadata as md
+from repro.core import pool as P
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+def check_pool_invariants(pool: P.Pool, cfg: PoolConfig) -> None:
+    meta = _np(pool.meta)
+    activity = _np(pool.activity)
+    cfree_items = _np(pool.cfree.items)[: int(pool.cfree.top)]
+    gfree_items = _np(pool.gfree.items)[: int(pool.gfree.top)]
+    pfree_items = _np(pool.pfree.items)[: int(pool.pfree.top)]
+
+    free_chunks = set(int(c) for c in cfree_items)
+    for g in gfree_items:
+        free_chunks.update(range(int(g), int(g) + 8))
+    free_p = set(int(p) for p in pfree_items)
+    assert len(free_chunks) == len(cfree_items) + 8 * len(gfree_items), \
+        "duplicate entries in chunk freelists"
+    assert len(free_p) == len(pfree_items), "duplicate entries in P freelist"
+
+    referenced_chunks: dict[int, int] = {}
+    owned_p: dict[int, int] = {}
+    for ospn in range(meta.shape[0]):
+        w0 = int(meta[ospn, 0])
+        valid = (w0 >> 31) & 1
+        if not valid:
+            continue
+        promoted = (w0 >> 30) & 1
+        dirty = (w0 >> 29) & 1
+        shadow = (w0 >> 28) & 1
+        nchunks = (w0 >> 20) & 0xF
+        ptrs = [int(meta[ospn, 1 + s]) & ((1 << 29) - 1) for s in range(7)]
+        # I3: dirty promoted pages hold no compressed copy
+        if promoted and dirty:
+            assert nchunks == 0, f"I3 violated: page {ospn} dirty with chunks"
+        # I4: clean promoted pages keep the shadow
+        if promoted and not dirty:
+            assert shadow == 1 and nchunks > 0, \
+                f"I4 violated: page {ospn} clean promoted without shadow"
+        # collect chunk references
+        if nchunks == 8:
+            chunk_set = list(range(ptrs[0], ptrs[0] + 8))
+        else:
+            chunk_set = ptrs[:nchunks]
+        for c in chunk_set:
+            assert c not in free_chunks, \
+                f"I1 violated: page {ospn} references free chunk {c}"
+            assert c not in referenced_chunks, \
+                f"I1 violated: chunk {c} shared by {referenced_chunks[c]} and {ospn}"
+            referenced_chunks[c] = ospn
+        # I2: promoted pages own exactly one allocated P-chunk
+        if promoted:
+            pidx = ptrs[6] if nchunks < 7 else int(meta[ospn, 7]) & ((1 << 29) - 1)
+            pidx = int(meta[ospn, 1 + md.PCHUNK_SLOT]) & ((1 << 29) - 1)
+            assert pidx not in free_p, f"I2: page {ospn} P-chunk {pidx} is free"
+            assert pidx not in owned_p, \
+                f"I2: P-chunk {pidx} owned by {owned_p[pidx]} and {ospn}"
+            owned_p[pidx] = ospn
+            a = int(activity[pidx])
+            assert (a >> 31) & 1 == 1, f"I2: activity[{pidx}] not allocated"
+            assert (a & ((1 << 30) - 1)) == ospn, \
+                f"I2: activity[{pidx}] OSPN mismatch"
+
+    # every allocated activity entry belongs to a promoted page
+    for pidx in range(activity.shape[0]):
+        a = int(activity[pidx])
+        if (a >> 31) & 1:
+            ospn = a & ((1 << 30) - 1)
+            assert owned_p.get(pidx) == ospn, \
+                f"activity[{pidx}] allocated but page {ospn} does not own it"
+
+    # conservation: singles partition into free + referenced
+    n_single = P.n_single_chunks(cfg)
+    n_groups = (cfg.n_cchunks - n_single) // 8
+    total = n_single + 8 * n_groups
+    assert len(free_chunks) + len(referenced_chunks) == total, \
+        f"I1 conservation: {len(free_chunks)} free + {len(referenced_chunks)} ref != {total}"
+    assert len(free_p) + len(owned_p) == cfg.n_pchunks, "P-chunk conservation"

@@ -1,0 +1,150 @@
+"""Unit + property tests for the rate-adaptive block compressor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.types import PoolConfig
+from repro.core import compressor as comp
+from repro.core.bitpack import (RATE_4BIT, RATE_8BIT, RATE_RAW, RATE_ZERO,
+                                pack4, unpack4, quantize_block,
+                                dequantize_block)
+
+CFG = PoolConfig(store_payload=True)
+KEY = jax.random.PRNGKey(0)
+
+
+def _page(kind: str, key=KEY) -> jnp.ndarray:
+    n = CFG.vals_per_page
+    if kind == "zero":
+        return jnp.zeros((n,), jnp.bfloat16)
+    if kind == "smooth":
+        return (jax.random.normal(key, (n,)) * 0.1).astype(jnp.bfloat16)
+    if kind == "random_bits":
+        bits = jax.random.randint(key, (n,), 0, 2 ** 16).astype(jnp.uint16)
+        x = jax.lax.bitcast_convert_type(bits, jnp.bfloat16)
+        return jnp.where(jnp.isfinite(x), x, jnp.bfloat16(1.0))
+    raise ValueError(kind)
+
+
+def test_pack4_roundtrip():
+    q = jnp.arange(-8, 8, dtype=jnp.int8)
+    assert jnp.all(unpack4(pack4(q), 16) == q)
+
+
+def test_quantize_error_bound():
+    x = _page("smooth")
+    q, s = quantize_block(x.reshape(4, -1), 8)
+    y = dequantize_block(q, s)
+    err = jnp.max(jnp.abs(y.astype(jnp.float32) - x.reshape(4, -1).astype(jnp.float32)))
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    assert err <= amax / 127.0 * 0.51 + amax * 0.01  # half-step + bf16 rounding
+
+
+@pytest.mark.parametrize("kind,expect_rate", [
+    ("zero", RATE_ZERO), ("random_bits", RATE_RAW)])
+def test_rate_selection(kind, expect_rate):
+    # random bit patterns are only guaranteed RAW under the lossless rule;
+    # lossy mode measures error relative to block amax (the KV-cache criterion)
+    cfg = PoolConfig(store_payload=True, lossless=(kind == "random_bits"))
+    x = _page(kind)
+    buf, rates, quanta, nchunks = comp.encode_page(x, cfg)
+    assert jnp.all(rates == expect_rate)
+    y = comp.decode_page(buf, rates, cfg)
+    if kind == "zero":
+        assert int(nchunks) == 0 and jnp.all(y == 0)
+    else:
+        assert int(nchunks) == 8 and jnp.all(y == x)  # raw is exact
+
+
+def test_mixed_page_block_decode():
+    cfg = PoolConfig(store_payload=True, lossless=True)
+    key = jax.random.PRNGKey(3)
+    raw = _page("random_bits", key)
+    # integers with amax pinned to 127 make the 8-bit grid exact (scale=1)
+    ints = jax.random.randint(key, (512,), -126, 127).at[0].set(127)
+    x = jnp.concatenate([
+        jnp.zeros(512, jnp.bfloat16),
+        ints.astype(jnp.bfloat16),
+        raw[:1024]])
+    buf, rates, quanta, nchunks = comp.encode_page(x, cfg)
+    assert int(rates[0]) == RATE_ZERO and int(rates[2]) == RATE_RAW
+    assert int(rates[1]) in (RATE_4BIT, RATE_8BIT)
+    for b in range(4):
+        blk = comp.decode_block(buf, rates, jnp.asarray(b), cfg)
+        ref = x[b * 512:(b + 1) * 512]
+        assert jnp.all(blk == ref)  # lossless mode: exact per-block decode
+
+
+def test_quanta_match_num_chunks():
+    for kind in ("zero", "smooth", "random_bits"):
+        x = _page(kind)
+        _, rates, quanta, nchunks = comp.encode_page(x, CFG)
+        assert int(nchunks) == -(-int(jnp.sum(quanta)) // 4)
+
+
+def test_coloc_off_single_block():
+    cfg = PoolConfig(coloc=False, store_payload=True)
+    x = _page("smooth")
+    buf, rates, quanta, nchunks = comp.encode_page(x, cfg)
+    assert rates.shape == (1,)
+    y = comp.decode_page(buf, rates, cfg)
+    amax = float(jnp.max(jnp.abs(x.astype(jnp.float32))))
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32) - x.astype(jnp.float32)))) \
+        <= cfg.tol4 * amax + 1e-6
+
+
+def test_lossless_mode_exact():
+    cfg = PoolConfig(lossless=True, store_payload=True)
+    # grid-aligned integers (amax=127 -> scale=1) compress losslessly at 8-bit
+    key = jax.random.PRNGKey(7)
+    x = jax.random.randint(key, (cfg.vals_per_page,), -126, 127)
+    x = x.at[0].set(127).astype(jnp.bfloat16)
+    buf, rates, _, _ = comp.encode_page(x, cfg)
+    assert int(rates[0]) == RATE_8BIT
+    y = comp.decode_page(buf, rates, cfg)
+    assert jnp.all(y == x)
+
+    # and arbitrary bit patterns still roundtrip exactly (raw fallback)
+    xr = _page("random_bits")
+    buf, rates, _, _ = comp.encode_page(xr, cfg)
+    assert jnp.all(comp.decode_page(buf, rates, cfg) == xr)
+
+
+@settings(max_examples=25, deadline=None)
+@given(scale=st.floats(1e-4, 1e3), seed=st.integers(0, 2 ** 16))
+def test_property_error_bound(scale, seed):
+    """decode(encode(x)) is within the configured relative tolerance for any
+    block that was not stored raw; raw and zero blocks are exact."""
+    key = jax.random.PRNGKey(seed)
+    x = (jax.random.normal(key, (CFG.vals_per_page,)) * scale).astype(jnp.bfloat16)
+    buf, rates, _, _ = comp.encode_page(x, CFG)
+    y = comp.decode_page(buf, rates, CFG)
+    xb = x.reshape(4, -1).astype(jnp.float32)
+    yb = y.reshape(4, -1).astype(jnp.float32)
+    for b in range(4):
+        r = int(rates[b])
+        err = float(jnp.max(jnp.abs(yb[b] - xb[b])))
+        amax = float(jnp.max(jnp.abs(xb[b])))
+        if r in (RATE_ZERO, RATE_RAW):
+            assert err == 0.0
+        elif r == RATE_4BIT:
+            assert err <= CFG.tol4 * amax + 1e-6
+        elif r == RATE_8BIT:
+            assert err <= CFG.tol8 * amax + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), bits=st.sampled_from([4, 8]))
+def test_property_flat_quantize_roundtrip(seed, bits):
+    key = jax.random.PRNGKey(seed)
+    x = (jax.random.normal(key, (2048,))).astype(jnp.bfloat16)
+    codes, scales = comp.quantize_blocks(x, bits, 512)
+    y = comp.dequantize_blocks(codes, scales, bits, 512)
+    qmax = 2 ** (bits - 1) - 1
+    xb = x.reshape(4, 512).astype(np.float32)
+    yb = np.asarray(y, np.float32).reshape(4, 512)
+    for b in range(4):
+        amax = np.abs(xb[b]).max()
+        assert np.abs(yb[b] - xb[b]).max() <= amax / qmax * 0.51 + amax * 0.01

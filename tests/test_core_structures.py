@@ -1,0 +1,205 @@
+"""Unit + property tests: metadata packing, freelists, mcache, clock."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import activity as act
+from repro.core import freelist as fl
+from repro.core import mcache as mcc
+from repro.core import metadata as md
+
+
+# -- metadata ---------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(bt=st.lists(st.integers(0, 3), min_size=4, max_size=4),
+       sz=st.lists(st.integers(0, 7), min_size=4, max_size=4),
+       nch=st.integers(0, 8), wc=st.integers(0, 15),
+       flags=st.tuples(st.booleans(), st.booleans(), st.booleans(), st.booleans()))
+def test_meta_header_roundtrip(bt, sz, nch, wc, flags):
+    w = jnp.uint32(0)
+    for i in range(4):
+        w = md.set_block_type(w, i, bt[i])
+        w = md.set_block_sz(w, i, sz[i])
+    w = md.set_num_chunks(w, nch)
+    w = md.set_wr_cntr(w, wc)
+    w = md.set_shadow_valid(w, int(flags[0]))
+    w = md.set_dirty(w, int(flags[1]))
+    w = md.set_promoted(w, int(flags[2]))
+    w = md.set_valid(w, int(flags[3]))
+    for i in range(4):
+        assert int(md.get_block_type(w, i)) == bt[i]
+        assert int(md.get_block_sz(w, i)) == sz[i]
+        assert int(md.get_block_type_dyn(w, jnp.asarray(i))) == bt[i]
+    assert int(md.get_num_chunks(w)) == nch
+    assert int(md.get_wr_cntr(w)) == wc
+    assert int(md.get_shadow_valid(w)) == int(flags[0])
+    assert int(md.get_dirty(w)) == int(flags[1])
+    assert int(md.get_promoted(w)) == int(flags[2])
+    assert int(md.get_valid(w)) == int(flags[3])
+
+
+@settings(max_examples=20, deadline=None)
+@given(ptrs=st.lists(st.integers(0, 2 ** 28 - 1), min_size=7, max_size=7))
+def test_meta_ptr_roundtrip(ptrs):
+    e = md.empty_entry()
+    for i, p in enumerate(ptrs):
+        e = md.set_ptr(e, i, p)
+    for i, p in enumerate(ptrs):
+        assert int(md.get_ptr(e, i)) == p
+
+
+def test_rates_header_roundtrip():
+    from repro.core.bitpack import RATE_4BIT, RATE_8BIT, RATE_RAW, RATE_ZERO
+    for rates in ([0, 1, 2, 3], [3, 3, 3, 3], [0, 0, 0, 0], [2, 1, 0, 3]):
+        r = jnp.asarray(rates, jnp.int32)
+        w = md.header_from_rates(r)
+        back = md.rates_from_header(w)
+        assert list(np.asarray(back)) == rates
+
+
+def test_activity_pack():
+    e = md.act_pack(1, 0, 12345)
+    assert int(md.act_allocated(e)) == 1
+    assert int(md.act_referenced(e)) == 0
+    assert int(md.act_ospn(e)) == 12345
+    e2 = md.act_set_referenced(e, 1)
+    assert int(md.act_referenced(e2)) == 1
+    assert int(md.act_ospn(e2)) == 12345
+
+
+# -- freelist ---------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.booleans(), min_size=1, max_size=60))
+def test_freelist_conservation(ops):
+    """Arbitrary pop/push sequences never duplicate or lose an index."""
+    n = 16
+    f = fl.make_freelist(n)
+    held: list[int] = []
+    for is_pop in ops:
+        if is_pop:
+            f, idx = fl.pop(f)
+            i = int(idx)
+            if i >= 0:
+                assert i not in held
+                held.append(i)
+            else:
+                assert int(f.top) == 0
+        elif held:
+            f = fl.push(f, jnp.asarray(held.pop()))
+    free = set(int(x) for x in np.asarray(f.items)[: int(f.top)])
+    assert len(free) == int(f.top)
+    assert free | set(held) == set(range(n))
+    assert not (free & set(held))
+
+
+def test_freelist_pop_n_push_n():
+    f = fl.make_freelist(8)
+    f, got = fl.pop_n(f, 7, jnp.asarray(3))
+    got = np.asarray(got)
+    assert (got[:3] >= 0).all() and (got[3:] == -1).all()
+    assert int(f.top) == 5
+    f = fl.push_n(f, jnp.asarray(got))
+    assert int(f.top) == 8
+
+
+# -- mcache -----------------------------------------------------------------
+
+def test_mcache_lru_and_evict():
+    mc = mcc.make_mcache(1, 2)  # 1 set, 2 ways
+    mc, hit, ev = mcc.access(mc, jnp.asarray(10))
+    assert not bool(hit) and int(ev) == -1
+    mc, hit, ev = mcc.access(mc, jnp.asarray(11))
+    assert not bool(hit) and int(ev) == -1
+    mc, hit, ev = mcc.access(mc, jnp.asarray(10))   # 10 -> MRU
+    assert bool(hit)
+    mc, hit, ev = mcc.access(mc, jnp.asarray(12))   # evicts LRU == 11
+    assert not bool(hit) and int(ev) == 11
+    assert bool(mcc.probe(mc, jnp.asarray(10)))
+    assert bool(mcc.probe(mc, jnp.asarray(12)))
+    assert not bool(mcc.probe(mc, jnp.asarray(11)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seq=st.lists(st.integers(0, 30), min_size=1, max_size=80))
+def test_mcache_matches_reference_lru(seq):
+    sets, ways = 2, 4
+    mc = mcc.make_mcache(sets, ways)
+    import collections
+    ref = [collections.OrderedDict() for _ in range(sets)]
+    for ospn in seq:
+        s = int(mcc._set_index(jnp.asarray(ospn), sets))
+        mc, hit, ev = mcc.access(mc, jnp.asarray(ospn))
+        rhit = ospn in ref[s]
+        assert bool(hit) == rhit
+        rev = -1
+        if rhit:
+            ref[s].move_to_end(ospn)
+        else:
+            if len(ref[s]) == ways:
+                rev, _ = ref[s].popitem(last=False)
+            ref[s][ospn] = True
+        assert int(ev) == rev
+
+
+# -- clock ------------------------------------------------------------------
+
+def _mk_activity(entries):
+    return jnp.asarray([md.act_pack(a, r, o) for (a, r, o) in entries],
+                       dtype=jnp.uint32)
+
+
+def test_clock_second_chance():
+    # 16 entries: all allocated; entry 5 unreferenced -> victim; others get
+    # their referenced bit cleared.
+    entries = [(1, 1, 100 + i) for i in range(16)]
+    entries[5] = (1, 0, 105)
+    a = _mk_activity(entries)
+    cache = mcc.make_mcache(2, 2)  # empty: probe misses
+    res = act.clock_scan(a, jnp.asarray(0, jnp.int32), cache, jax.random.PRNGKey(0))
+    assert int(res.victim_pidx) == 5
+    assert int(res.victim_ospn) == 105
+    assert not bool(res.used_random)
+    assert int(res.groups_scanned) == 1
+    refs = np.asarray(md.act_referenced(res.activity))
+    assert refs.sum() == 0  # all cleared in the scanned group
+
+
+def test_clock_probe_skips_cached():
+    entries = [(1, 1, 100 + i) for i in range(16)]
+    entries[5] = (1, 0, 105)
+    entries[9] = (1, 0, 109)
+    a = _mk_activity(entries)
+    cache = mcc.make_mcache(2, 2)
+    cache, _, _ = mcc.access(cache, jnp.asarray(105))  # 105 is hot-in-cache
+    res = act.clock_scan(a, jnp.asarray(0, jnp.int32), cache, jax.random.PRNGKey(0))
+    assert int(res.victim_pidx) == 9  # skipped the cache-resident page
+
+
+def test_clock_random_fallback():
+    entries = [(1, 1, 100 + i) for i in range(16)]  # all referenced
+    a = _mk_activity(entries)
+    cache = mcc.make_mcache(2, 2)
+    res = act.clock_scan(a, jnp.asarray(0, jnp.int32), cache, jax.random.PRNGKey(0))
+    assert bool(res.used_random)
+    assert 0 <= int(res.victim_pidx) < 16
+    assert int(res.groups_scanned) == 1  # bounded to one fetch (the paper's rule)
+
+
+def test_clock_skips_empty_group():
+    entries = [(0, 0, 0) for _ in range(16)] + [(1, 0, 200 + i) for i in range(16)]
+    a = _mk_activity(entries)
+    cache = mcc.make_mcache(2, 2)
+    res = act.clock_scan(a, jnp.asarray(0, jnp.int32), cache, jax.random.PRNGKey(0))
+    assert int(res.victim_pidx) == 16
+    assert int(res.groups_scanned) == 2
+
+
+def test_clock_lazy_touch():
+    a = _mk_activity([(1, 0, 7)] * 16)
+    a2 = act.lazy_touch(a, jnp.asarray(3))
+    assert int(md.act_referenced(a2[3])) == 1
+    a3 = act.lazy_touch(a2, jnp.asarray(-1))  # no-op
+    assert jnp.all(a3 == a2)

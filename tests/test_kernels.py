@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- qpack -------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("shape,block", [
+    ((2048,), 512), ((4, 1024), 256), ((2, 3, 512), 256), ((8192,), 512)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_qpack_encode_matches_ref(bits, shape, block, dtype):
+    x = (jax.random.normal(KEY, shape) * 2.0).astype(dtype)
+    codes, scales = ops.qpack_encode(x, bits=bits, block=block)
+    rcodes, rscales = ref.qpack_encode_ref(x, bits, block)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(rcodes))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(rscales),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("shape,block", [((2048,), 512), ((4, 1024), 256)])
+def test_qpack_decode_matches_ref(bits, shape, block):
+    x = (jax.random.normal(KEY, shape) * 0.5).astype(jnp.bfloat16)
+    codes, scales = ref.qpack_encode_ref(x, bits, block)
+    got = ops.qpack_decode(codes, scales, bits=bits, block=block)
+    want = ref.qpack_decode_ref(codes, scales, bits, block)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qpack_roundtrip_error_bound(bits):
+    x = (jax.random.normal(KEY, (16, 1024)) * 3.0).astype(jnp.bfloat16)
+    codes, scales = ops.qpack_encode(x, bits=bits, block=256)
+    y = ops.qpack_decode(codes, scales, bits=bits, block=256)
+    qmax = 2 ** (bits - 1) - 1
+    xb = np.asarray(x, np.float32).reshape(16, 4, 256)
+    yb = np.asarray(y, np.float32).reshape(16, 4, 256)
+    amax = np.abs(xb).max(axis=-1, keepdims=True)
+    assert (np.abs(yb - xb) <= amax / qmax * 0.51 + amax * 0.01).all()
+
+
+def test_qpack_zero_block():
+    x = jnp.zeros((8, 512), jnp.bfloat16)
+    codes, scales = ops.qpack_encode(x.reshape(-1), bits=4, block=512)
+    assert np.asarray(codes).sum() == 0
+    y = ops.qpack_decode(codes, scales, bits=4, block=512)
+    assert np.asarray(y, np.float32).sum() == 0
+
+
+# -- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 256, 4, 4, 64), (2, 128, 4, 2, 64), (1, 256, 8, 2, 128),
+    (1, 128, 2, 1, 128)])
+def test_flash_attention_matches_ref(causal, B, S, Hq, Hkv, D):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=causal, tq=128, tk=128)
+    want = ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_flash_attention_small_tiles():
+    q = jax.random.normal(KEY, (1, 64, 2, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 64, 2, 64), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 64, 2, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, tq=32, tk=32)
+    want = ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+# -- fused dequant decode attention -------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (2, 256, 4, 2, 64), (1, 512, 8, 2, 128), (2, 256, 4, 4, 128)])
+def test_kvc_attention_matches_ref(bits, B, S, Hq, Hkv, D):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    from repro.core.compressor import quantize_blocks
+    kc, ksc = quantize_blocks(k, bits, D)
+    vc, vsc = quantize_blocks(v, bits, D)
+    ksc, vsc = ksc[..., 0], vsc[..., 0]
+    lengths = jnp.asarray([S, S // 2][:B][: B] + [S] * max(0, B - 2), jnp.int32)[:B]
+    got = ops.kvc_decode_attention(q, kc, ksc, vc, vsc, lengths, bits=bits,
+                                   t_blk=128)
+    want = ref.kvc_attn_ref(q, kc, ksc, vc, vsc, bits=bits, lengths=lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_kvc_attention_respects_length_mask():
+    """Tokens beyond `length` must not influence the output."""
+    B, S, Hq, Hkv, D = 1, 256, 2, 1, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    from repro.core.compressor import quantize_blocks
+    out = []
+    for tail_scale in (1.0, 100.0):
+        k2 = k.at[:, 100:].mul(tail_scale)
+        v2 = v.at[:, 100:].mul(tail_scale)
+        kc, ksc = quantize_blocks(k2, 8, D)
+        vc, vsc = quantize_blocks(v2, 8, D)
+        out.append(ops.kvc_decode_attention(
+            q, kc, ksc[..., 0], vc, vsc[..., 0],
+            jnp.asarray([100], jnp.int32), bits=8))
+    np.testing.assert_allclose(np.asarray(out[0], np.float32),
+                               np.asarray(out[1], np.float32), atol=1e-6)

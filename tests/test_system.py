@@ -1,0 +1,50 @@
+"""End-to-end behaviour tests for the paper's system: the IBEX mechanism's
+headline claims exercised through the full stack (fast versions of the
+benchmark cells)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.simx.engine import SCHEMES, run_workload
+from repro.simx.trace import WORKLOADS
+
+
+def test_ibex_beats_tmcc_on_migration_heavy_workload():
+    """Paper Fig. 9/11: on migration-heavy traffic IBEX moves far fewer
+    internal bytes than TMCC and ends up faster."""
+    ibex = run_workload("ibex", WORKLOADS["pr"], n_accesses=3000,
+                        promoted_pages=48)
+    tmcc = run_workload("tmcc", WORKLOADS["pr"], n_accesses=3000,
+                        promoted_pages=48)
+    assert ibex["internal_accesses"] < tmcc["internal_accesses"]
+    assert ibex["time_s"] < tmcc["time_s"]
+
+
+def test_shadowed_promotion_eliminates_recompression_readonly():
+    """Paper §6.2: the read-only workload (XSBench) has ~zero dirty
+    demotions under shadowed promotion."""
+    r = run_workload("ibex", WORKLOADS["xsbench"], n_accesses=3000,
+                     promoted_pages=48)
+    total = r["demotions_clean"] + r["demotions_dirty"]
+    if total:
+        # a page's FIRST demotion is necessarily dirty (first-touch data was
+        # never compressed); steady-state demotions are clean. At this trace
+        # length the first-compression tail is ~10-15% of demotions.
+        assert r["demotions_clean"] / total > 0.8
+    # and the no-shadow ablation recompresses
+    base = run_workload("ibex_base", WORKLOADS["xsbench"], n_accesses=3000,
+                        promoted_pages=48)
+    assert base["demotions_dirty"] >= base["demotions_clean"]
+
+
+def test_random_fallback_is_rare():
+    """Paper §4.4: random selection in <~1% of demotions at sane ratios."""
+    r = run_workload("ibex", WORKLOADS["mcf"], n_accesses=3000,
+                     promoted_pages=48)
+    total = max(r["demotions_clean"] + r["demotions_dirty"], 1)
+    assert r["random_fallback"] / total < 0.25  # loose: tiny test config
+
+
+def test_compression_expands_capacity():
+    r = run_workload("ibex", WORKLOADS["omnetpp"], n_accesses=2000,
+                     promoted_pages=48)
+    assert r["compression_ratio"] > 1.1

@@ -1,0 +1,200 @@
+"""Training substrate tests: optimizer, compressed state, grad compression,
+data pipeline determinism, checkpoint atomicity/integrity/elastic restore,
+and a short end-to-end loss-goes-down run."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.types import OptimizerConfig, TrainConfig, replace
+from repro.configs import get_reduced
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import transformer as T
+from repro.optim import adamw, gradcomp
+from repro.train import checkpoint as ckpt
+from repro.train import elastic
+from repro.train.trainer import grads_and_loss, make_train_step
+
+CFG = get_reduced("llama3_8b")
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(step=0, b=4, s=32):
+    return make_batch(CFG, step, global_batch=b, seq_len=s)
+
+
+# -- optimizer ----------------------------------------------------------------
+
+def test_adamw_decreases_loss():
+    params, _ = T.init_params(KEY, CFG)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1)
+    opt = adamw.init(params, ocfg)
+    batch = _batch()
+    losses = []
+    for i in range(8):
+        grads, loss = grads_and_loss(params, batch, CFG, 1)
+        params, opt, m = adamw.update(grads, opt, params, ocfg)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_compressed_state_tracks_dense():
+    params, _ = T.init_params(KEY, CFG)
+    batch = _batch()
+    dense_cfg = OptimizerConfig(lr=1e-3, warmup_steps=1)
+    comp_cfg = replace(dense_cfg, compress_state=True, state_block=256)
+    pd, pc = params, params
+    od, oc = adamw.init(params, dense_cfg), adamw.init(params, comp_cfg)
+    ld = lc = None
+    for i in range(8):
+        gd, ld = grads_and_loss(pd, batch, CFG, 1)
+        gc_, lc = grads_and_loss(pc, batch, CFG, 1)
+        pd, od, _ = adamw.update(gd, od, pd, dense_cfg)
+        pc, oc, _ = adamw.update(gc_, oc, pc, comp_cfg)
+    # individual parameter paths diverge chaotically under moment rounding
+    # (expected for linear int8 moments); what must match is optimization
+    # QUALITY: both runs make comparable progress from the same start. On an
+    # untrained model over 8 steps, end-loss *proximity* is itself chaotic,
+    # so assert relative progress instead.
+    _, ld_end = grads_and_loss(pd, batch, CFG, 1)
+    _, lc_end = grads_and_loss(pc, batch, CFG, 1)
+    _, l0 = grads_and_loss(params, batch, CFG, 1)
+    prog_d = float(l0) - float(ld_end)
+    prog_c = float(l0) - float(lc_end)
+    assert prog_d > 0 and prog_c > 0            # both optimize
+    assert prog_c > 0.5 * prog_d                # compressed keeps >=50% of
+    #                                             the dense run's progress
+
+
+def test_compressed_state_smaller():
+    params, _ = T.init_params(KEY, CFG)
+    dense = adamw.init(params, OptimizerConfig())
+    comp = adamw.init(params, OptimizerConfig(compress_state=True))
+    assert adamw.state_bytes(comp) < 0.35 * adamw.state_bytes(dense)
+
+
+# -- gradient compression ------------------------------------------------------
+
+def test_gradcomp_error_feedback_reduces_bias():
+    g = {"w": jax.random.normal(KEY, (2048,)) * 0.01}
+    r = gradcomp.init_residual(g)
+    # accumulated EF-compressed grads track accumulated true grads
+    acc_true = jnp.zeros((2048,))
+    acc_comp = jnp.zeros((2048,))
+    for i in range(16):
+        gi = {"w": jax.random.normal(jax.random.fold_in(KEY, i), (2048,)) * 0.01}
+        q, r = gradcomp.compress_with_feedback(gi, r, block=256)
+        back = gradcomp.decompress(q, gi, block=256)
+        acc_true += gi["w"]
+        acc_comp += back["w"]
+    err = float(jnp.linalg.norm(acc_comp - acc_true) /
+                jnp.linalg.norm(acc_true))
+    assert err < 0.05, err     # EF bounds accumulated error
+
+
+def test_gradcomp_bytes():
+    g = {"w": jnp.zeros((4096,), jnp.float32)}
+    q, _ = gradcomp.compress_with_feedback(g, gradcomp.init_residual(g))
+    assert gradcomp.compressed_bytes(q) < 0.3 * 4096 * 4
+
+
+# -- data pipeline -------------------------------------------------------------
+
+def test_pipeline_deterministic_and_sharded():
+    b1 = make_batch(CFG, 7, global_batch=8, seq_len=64, shard=0, num_shards=2)
+    b2 = make_batch(CFG, 7, global_batch=8, seq_len=64, shard=0, num_shards=2)
+    b3 = make_batch(CFG, 7, global_batch=8, seq_len=64, shard=1, num_shards=2)
+    assert jnp.all(b1["tokens"] == b2["tokens"])          # replayable
+    assert not bool(jnp.all(b1["tokens"] == b3["tokens"]))  # shards differ
+    assert b1["tokens"].shape == (4, 64)
+    assert jnp.all(b1["labels"][:, :-1] == b1["tokens"][:, 1:])
+
+
+def test_pipeline_mix_exercises_compressor():
+    b = make_batch(CFG, 0, global_batch=8, seq_len=256,
+                   dcfg=DataConfig(zero_frac=0.3))
+    frac_zero = float(jnp.mean(b["tokens"] == 0))
+    assert 0.05 < frac_zero < 0.6
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(8, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    for s in (1, 2, 3, 4):
+        ckpt.save(d, s, tree, keep=2)
+    assert ckpt.list_steps(d) == [3, 4]
+    assert ckpt.latest(d) == 4
+    like = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), tree)
+    back, _ = ckpt.restore(d, 4, like)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert jnp.all(a == b)
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(1024, dtype=jnp.float32)}
+    ckpt.save(d, 1, tree)
+    ckpt.save(d, 2, tree)
+    # corrupt the newest payload
+    import glob
+    npz = glob.glob(os.path.join(d, "step_00000002", "arrays.npz"))[0]
+    with open(npz, "r+b") as f:
+        f.seek(120)
+        f.write(b"\xde\xad\xbe\xef")
+    assert ckpt.latest(d) == 1     # falls back to the last valid one
+
+
+def test_checkpoint_async(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.ones((64,), jnp.float32)}
+    t = ckpt.save_async(d, 5, tree)
+    ckpt.wait_pending()
+    assert ckpt.latest(d) == 5
+
+
+# -- elastic -------------------------------------------------------------------
+
+def test_plan_mesh_factors():
+    m = elastic.plan_mesh(512, prefer_model=16, pods=2)
+    assert m.shape == (2, 16, 16) and m.axes == ("pod", "data", "model")
+    m = elastic.plan_mesh(256, prefer_model=16)
+    assert m.shape == (16, 16)
+    m = elastic.plan_mesh(6, prefer_model=16)
+    assert m.num_devices == 6
+
+
+def test_degraded_plan():
+    old = elastic.plan_mesh(512, prefer_model=16, pods=2)
+    new = elastic.degraded_plan(old, lost_devices=16)
+    assert new.num_devices <= 496
+    assert new.num_devices % new.shape[-1] == 0
+
+
+def test_straggler_monitor():
+    mon = elastic.StragglerMonitor(4)
+    for step in range(5):
+        for r in range(4):
+            mon.record(r, 1.0 if r != 2 else 3.5)
+    assert mon.stragglers() == [2]
+
+
+# -- end-to-end train step (jit path used by launch/train.py) -------------------
+
+def test_make_train_step_runs():
+    tcfg = TrainConfig(steps=3, seq_len=32, global_batch=4, microbatches=2,
+                       optimizer=OptimizerConfig(lr=1e-3, warmup_steps=1))
+    params, _ = T.init_params(KEY, CFG)
+    opt = adamw.init(params, tcfg.optimizer)
+    step_fn, _ = make_train_step(CFG, tcfg)
+    batch = _batch(b=4, s=32)
+    p, o, m = step_fn(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    p, o, m = step_fn(p, o, _batch(step=1, b=4, s=32))
+    assert np.isfinite(float(m["loss"]))
