@@ -1,0 +1,113 @@
+"""Trace-replay throughput benchmark: the seed's one-access-per-step serial
+scan vs the batched window front-end (repro.core.engine.batch), per scheme
+and workload.
+
+Writes ``BENCH_simx.json`` at the repo root so the perf trajectory is
+tracked from PR 1 onward: ``serial`` is the *before* (the seed engine's
+replay structure, ``window=1``), ``batched`` is the *after* (the default
+front-end). Steady-state accesses/sec, compile excluded (median of reps).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import statistics
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import batch as B
+from repro.core.engine import state as S
+from repro.simx.engine import SCHEMES, first_touch_populate, pool_cfg_for
+from repro.simx.trace import WORKLOADS, make_rates_table, make_trace
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_simx.json"
+
+Q_SCHEMES, F_SCHEMES = ["ibex", "tmcc"], ["ibex", "tmcc", "mxt", "dmc"]
+Q_WL, F_WL = ["mcf", "xsbench", "pr"], ["mcf", "xsbench", "pr", "lbm",
+                                        "omnetpp"]
+
+
+def _warmed_pool(policy, cfg, spec, n_pages, prom, seed=0):
+    rates = make_rates_table(spec, n_pages, seed=seed)
+    n_used = min(max(int(prom * spec.footprint_pages), 32), n_pages)
+    pool = S.make_pool(cfg, seed=seed, rates_table=jnp.asarray(rates))
+    return first_touch_populate(pool, cfg, policy, n_used=n_used,
+                                seed=seed), n_used
+
+
+def _steady_rates(fn_a, fn_b, n_accesses: int, reps: int):
+    """Interleaved A/B steady-state rates — back-to-back pairs so machine
+    load hits both variants equally, min-of-reps so preemption noise (large
+    on shared boxes) does not land in the estimate."""
+    jax.block_until_ready(fn_a().counters)          # compile + warm
+    jax.block_until_ready(fn_b().counters)
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a().counters)
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b().counters)
+        tb.append(time.perf_counter() - t0)
+    return n_accesses / min(ta), n_accesses / min(tb)
+
+
+def run(quick: bool) -> List[Dict]:
+    schemes = Q_SCHEMES if quick else F_SCHEMES
+    workloads = Q_WL if quick else F_WL
+    # the paper-fig suite's operating point (paper_figs.PROM_Q/N_Q scale)
+    n_accesses = 4096
+    prom = 64
+    reps = 5 if quick else 9
+    window = B.DEFAULT_WINDOW
+
+    serial: Dict[str, Dict[str, float]] = {}
+    batched: Dict[str, Dict[str, float]] = {}
+    rows = []
+    for s in schemes:
+        policy = SCHEMES[s]
+        n_pages = 4 * prom
+        cfg = pool_cfg_for(policy, n_pages=n_pages, n_pchunks=prom,
+                           n_cchunks=2 * n_pages * 8)
+        serial[s], batched[s] = {}, {}
+        for wl in workloads:
+            spec = WORKLOADS[wl]
+            pool, n_used = _warmed_pool(policy, cfg, spec, n_pages, prom)
+            ospn, wr, blk = make_trace(spec, n_accesses=n_accesses,
+                                       n_pages=n_used, seed=0)
+            args = (jnp.asarray(ospn), jnp.asarray(wr), jnp.asarray(blk))
+            t0 = time.perf_counter()
+            serial[s][wl], batched[s][wl] = _steady_rates(
+                lambda: B._replay_serial(pool, cfg, policy, *args),
+                lambda: B.replay_trace(pool, cfg, policy, ospn, wr, blk,
+                                       window=window),
+                n_accesses, reps)
+            speed = batched[s][wl] / serial[s][wl]
+            rows.append({
+                "name": f"simx.replay.{s}.{wl}",
+                "us": (time.perf_counter() - t0) * 1e6,
+                "derived": f"serial={serial[s][wl]:,.0f}acc/s;"
+                           f"batched={batched[s][wl]:,.0f}acc/s;"
+                           f"speedup=x{speed:.2f}"})
+    speedups = [batched[s][w] / serial[s][w] for s in schemes
+                for w in workloads]
+    gm = float(np.exp(np.mean(np.log(speedups))))
+    payload = {
+        "meta": {"n_accesses": n_accesses, "promoted_pages": prom,
+                 "window": window, "reps": reps, "quick": quick,
+                 "unit": "accesses/sec (steady state, compile excluded)"},
+        "serial_acc_per_sec": serial,
+        "batched_acc_per_sec": batched,
+        "speedup_batched_over_serial": {
+            s: {w: batched[s][w] / serial[s][w] for w in workloads}
+            for s in schemes},
+        "geomean_speedup": gm,
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    rows.append({"name": "simx.replay.geomean_speedup", "us": 0.0,
+                 "derived": f"x{gm:.2f};json={JSON_PATH.name}"})
+    return rows

@@ -1,0 +1,41 @@
+"""Layered pool engine (DESIGN.md §1): mechanism/policy split of the former
+``repro.core.pool`` monolith.
+
+  * ``state``  — the ``Pool`` pytree over the four device-memory regions
+                 (DESIGN.md §3), traffic counters, and metrics;
+  * ``ops``    — pure, individually-jittable *mechanism* functions:
+                 allocation/free, metadata read-modify-write, store I/O,
+                 promotion/demotion, host-facing access bodies;
+  * ``policy`` — the ``Policy`` protocol + per-scheme implementations
+                 (ibex / tmcc / dylect / mxt / dmc / compresso): promotion
+                 trigger, victim selection, and *in-place* residency/traffic
+                 accounting hooks (no post-hoc counter arithmetic);
+  * ``batch``  — the batched access front-end: a window of W accesses per
+                 scan step, vectorized classification + conflict
+                 serialization only for same-page hits.
+
+``repro.core.pool`` remains as a thin compatibility shim for one PR.
+"""
+from repro.core.engine import batch, ops, policy, state
+from repro.core.engine.ops import (demote_if_needed, demote_one,
+                                   host_read_block, host_write_block,
+                                   host_write_page)
+from repro.core.engine.policy import (DEFAULT_POLICY, POLICIES, CompressoPolicy,
+                                      DmcPolicy, DylectPolicy, IbexPolicy,
+                                      MxtPolicy, Policy, SecondChanceLanes,
+                                      TmccPolicy)
+from repro.core.engine.state import (COUNTER_NAMES, CTR_DTYPE, NUM_COUNTERS,
+                                     Pool, compression_ratio, counters_dict,
+                                     make_pool, n_single_chunks, total_traffic)
+
+__all__ = [
+    "batch", "ops", "policy", "state",
+    "Pool", "make_pool", "n_single_chunks", "counters_dict",
+    "compression_ratio", "total_traffic", "COUNTER_NAMES", "NUM_COUNTERS",
+    "CTR_DTYPE",
+    "Policy", "IbexPolicy", "TmccPolicy", "DylectPolicy", "MxtPolicy",
+    "DmcPolicy", "CompressoPolicy", "SecondChanceLanes", "POLICIES",
+    "DEFAULT_POLICY",
+    "host_read_block", "host_write_block", "host_write_page", "demote_one",
+    "demote_if_needed",
+]

@@ -1,0 +1,268 @@
+"""Batched access front-end (DESIGN.md §6).
+
+Trace replay used to run one access per ``lax.scan`` step, paying the full
+serial state-machine path for every access. This front-end processes a
+window of W accesses per step:
+
+  phase 0  background demotion engine tops up the free-P-chunk watermark
+           once per window;
+  phase 1  vectorized classification against a window-start metadata
+           snapshot: accesses that resolve without metadata transitions —
+           hot/zero/invalid reads, and writes to already-promoted all-hot
+           dirty pages — are *fast*; their traffic is summed with window
+           vector arithmetic;
+  phase 2  vectorized metadata probes + activity updates: the whole window
+           goes through ``mcache.access_window`` (window-granular LRU) and
+           one masked scatter applies every lazy referenced-bit update;
+  phase 3  conflict serialization: the remaining accesses — writes,
+           promotions, and *same-page hits* whose predecessor in the window
+           was itself slow — replay in order through the exact serial
+           per-access bodies, looping only over the n_slow conflicts.
+
+Fast accesses mutate nothing but counters, so a fast predecessor can never
+invalidate a later classification; slow accesses re-read live metadata.
+The divergences from the serial engine are (a) background-demotion timing
+(per window instead of per access), (b) window-granular metadata-cache
+recency, and (c) a fast hot-read of a page a slow access demoted earlier
+in the same window is still accounted as hot. All three shift counters
+within noise at sane region ratios (asserted by
+tests/test_simx_schemes.py); invariants I1-I5 are unaffected
+(tests/test_pool_properties.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import PoolConfig
+from repro.core import mcache as mcc
+from repro.core import metadata as md
+from repro.core.engine import ops
+from repro.core.engine.policy import Policy
+from repro.core.engine.state import (C_ACT_WR, C_DATA_RD, C_DATA_WR,
+                                     C_HOST_RD, C_HOST_WR, C_MC_HIT,
+                                     C_MC_MISS, C_META_RD, C_META_WR,
+                                     C_ZERO_SERVED, Pool, bump)
+
+DEFAULT_WINDOW = 32
+SLOW_FORI = 8      # slow accesses handled per window before the while loop
+
+
+def _classify_window(pool: Pool, cfg: PoolConfig, ospns, writes, blocks):
+    """Vectorized fast-path mask over a window (see module docstring).
+
+    An access is *fast* when its window-start metadata snapshot resolves it
+    without state transitions — a read of a hot block, zero block, or
+    invalid page, or a write to an already-promoted dirty page with every
+    block hot (§4.5 steady state: such a write leaves the metadata word
+    bit-identical and only moves data + counters) — and no earlier access
+    in the window both touched the same page and was itself slow. Fast
+    accesses never mutate metadata, so a fast predecessor on the same page
+    cannot invalidate the snapshot."""
+    w0s = pool.meta[ospns, 0]                                  # [W]
+    valid = md.get_valid(w0s) == 1
+    promoted = md.get_promoted(w0s) == 1
+    if cfg.coloc:
+        bt = md.get_block_type_dyn(w0s, blocks)
+        all_prom = jnp.ones_like(valid)
+        for i in range(cfg.blocks_per_page):
+            all_prom = all_prom & (md.get_block_type(w0s, i) == md.BT_PROM)
+    else:
+        bt = md.get_block_type(w0s, 0)
+        all_prom = bt == md.BT_PROM
+    is_zero = valid & (bt == md.BT_ZERO)
+    is_hot = valid & promoted & (bt == md.BT_PROM)
+    hot_write = valid & promoted & all_prom & \
+        (md.get_dirty(w0s) == 1) & (md.get_num_chunks(w0s) == 0)
+    candidate = jnp.where(writes, hot_write, is_zero | is_hot | (~valid))
+    w = ospns.shape[0]
+    earlier = jnp.arange(w)[None, :] < jnp.arange(w)[:, None]
+    same = ospns[:, None] == ospns[None, :]
+    slow_pred = jnp.any(same & earlier & (~candidate)[None, :], axis=1)
+    fast = candidate & (~slow_pred)
+    return fast, is_zero, is_hot
+
+
+def _mcache_window(pool: Pool, cfg: PoolConfig, policy: Policy, ospns) -> Pool:
+    """Vectorized metadata-cache walk + lazy activity updates for one window
+    (mcache.access_window has the recency model). The ~W serial cache steps
+    of the one-access-per-step engine collapse into a handful of vector ops."""
+    cache, hits, evicted = mcc.access_window(pool.cache, ospns)
+    n_hit = jnp.sum(hits)
+    n_miss = ospns.shape[0] - n_hit
+    if cfg.compact:
+        widths = jnp.ones_like(ospns)
+    else:
+        widths = 1 + (ospns & 1)     # uncompacted entries straddle 64B (§4.7)
+    counters = bump(pool.counters, C_MC_HIT, n_hit)
+    counters = bump(counters, C_MC_MISS, n_miss)
+    counters = bump(counters, C_META_RD, jnp.sum(jnp.where(hits, 0, widths)))
+    counters = policy.on_mcache_miss(counters, n=n_miss)
+    # lazy reference update (§4.4) for every eviction, as one masked scatter
+    ev = evicted.reshape(-1)
+    entries = pool.meta[jnp.maximum(ev, 0)]
+    w0 = entries[:, 0]
+    prom = (md.get_promoted(w0) == 1) & (md.get_valid(w0) == 1) & (ev >= 0)
+    pidx = md.get_ptr(entries, md.PCHUNK_SLOT).astype(jnp.int32)
+    safe_pidx = jnp.clip(jnp.where(prom, pidx, 0), 0,
+                         pool.activity.shape[0] - 1)
+    already = md.act_referenced(pool.activity[safe_pidx]) == 1
+    ref_bit = jnp.uint32(1) << jnp.uint32(md.ACT_REFERENCED_BIT)
+    delta = jnp.where(prom & (~already), ref_bit, jnp.uint32(0))
+    activity = pool.activity.at[safe_pidx].add(delta)
+    counters = policy.charge_activity(counters, C_ACT_WR, jnp.sum(prom))
+    return pool._replace(cache=cache, activity=activity, counters=counters)
+
+
+def _window_step(pool: Pool, cfg: PoolConfig, policy: Policy, xs):
+    ospns, writes, blocks = xs
+    window = ospns.shape[0]
+    zero_block = jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
+
+    # phase 0: background demotion engine — top up once per window to a
+    # raised target (watermark + expected promotions per window) so the
+    # free list rarely exhausts mid-window; a window with more promotions
+    # than that stays live through the promote path's self-ensure.
+    # fori-of-cond, not while: XLA executes a skipped cond branch as a
+    # cheap copy, whereas demotions inside a dynamic-trip while loop cost
+    # ~3x (measured on CPU).
+    # the raise is bounded by the watermark so small pools keep (almost)
+    # the serial engine's residency: a higher target would evict hot pages
+    # the serial engine keeps resident and skew traffic at small scales
+    extra = min(window // 4, max(2, cfg.demote_watermark // 2))
+    budget = max(4, window // 4)
+    pool = ops.demote_if_needed(pool, cfg, policy, max_demotes=budget,
+                                watermark=cfg.demote_watermark + extra)
+
+    # phase 1: classification snapshot (phase 2 never touches metadata)
+    fast, is_zero, is_hot = _classify_window(pool, cfg, ospns, writes, blocks)
+
+    # phase 2: vectorized metadata probes + activity updates for the window
+    pool = _mcache_window(pool, cfg, policy, ospns)
+
+    # vectorized accounting for the fast accesses
+    fast_rd = fast & (~writes)
+    fast_wr = fast & writes
+    n_fast_rd = jnp.sum(fast_rd)
+    n_fast_wr = jnp.sum(fast_wr)
+    counters = bump(pool.counters, C_HOST_RD, n_fast_rd)
+    counters = bump(counters, C_HOST_WR, n_fast_wr)
+    counters = policy.on_host_access(counters, False, n=n_fast_rd)
+    counters = policy.on_host_access(counters, True, n=n_fast_wr)
+    counters = bump(counters, C_ZERO_SERVED, jnp.sum(fast_rd & is_zero))
+    counters = bump(counters, C_DATA_RD,
+                    jnp.sum(fast_rd & is_hot) * (cfg.block_bytes // 64))
+    # fast (hot, dirty) writes: data write + metadata write-back, no
+    # metadata *change* — see _classify_window
+    counters = bump(counters, C_DATA_WR, n_fast_wr * (cfg.block_bytes // 64))
+    if cfg.compact:
+        wr_widths = n_fast_wr
+    else:
+        wr_widths = jnp.sum(jnp.where(fast_wr, 1 + (ospns & 1), 0))
+    counters = bump(counters, C_META_WR, wr_widths)
+    pool = pool._replace(counters=counters)
+
+    # phase 3: serialized replay of the slow accesses only — fast accesses
+    # pay no per-access control flow at all. The first SLOW_FORI slow
+    # accesses run in a fori-of-cond (a skipped cond is a cheap copy, and a
+    # taken branch executes at serial-engine cost); the rare overflow (a
+    # window with more slow accesses than SLOW_FORI, e.g. first-touch
+    # population) drains through a while loop, whose heavy bodies XLA runs
+    # ~3x slower — hence the split.
+    n_slow = jnp.sum(~fast)
+    slow_order = jnp.argsort(jnp.where(fast, window + jnp.arange(window),
+                                       jnp.arange(window)))
+
+    def process(k, p: Pool) -> Pool:
+        def do_write(r: Pool) -> Pool:
+            c = policy.on_host_access(bump(r.counters, C_HOST_WR), True)
+            r = r._replace(counters=c)
+            return ops.write_block_op(r, cfg, policy, ospns[k], blocks[k],
+                                      zero_block)
+
+        def do_read(r: Pool) -> Pool:
+            c = policy.on_host_access(bump(r.counters, C_HOST_RD), False)
+            r = r._replace(counters=c)
+            return ops.read_block_op(r, cfg, policy, ospns[k], blocks[k])[0]
+
+        return jax.lax.cond(writes[k], do_write, do_read, p)
+
+    k_fori = min(SLOW_FORI, window)
+    pool = jax.lax.fori_loop(
+        0, k_fori,
+        lambda i, p: jax.lax.cond(i < n_slow,
+                                  lambda q: process(slow_order[i], q),
+                                  lambda q: q, p),
+        pool)
+
+    def slow_cond(carry):
+        i, _ = carry
+        return i < n_slow
+
+    def slow_body(carry):
+        i, p = carry
+        return i + 1, process(slow_order[i], p)
+
+    _, pool = jax.lax.while_loop(slow_cond, slow_body,
+                                 (jnp.asarray(k_fori, jnp.int32), pool))
+    return pool, None
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _replay_windows(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
+                    writes, blocks) -> Pool:
+    def scan_step(p, xs):
+        return _window_step(p, cfg, policy, xs)
+
+    pool, _ = jax.lax.scan(scan_step, pool, (ospns, writes, blocks))
+    return pool
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _replay_serial(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
+                   writes, blocks) -> Pool:
+    """The seed's one-access-per-step scan (kept as the batched path's
+    reference and for BENCH_simx.json before/after measurements)."""
+    zero_block = jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
+
+    def step(p, x):
+        ospn, w, blk = x
+
+        def do_write(q):
+            return ops._host_write_block(q, cfg, policy, ospn, blk, zero_block)
+
+        def do_read(q):
+            return ops._host_read_block(q, cfg, policy, ospn, blk)[0]
+
+        return jax.lax.cond(w, do_write, do_read, p), None
+
+    pool, _ = jax.lax.scan(step, pool, (ospns, writes, blocks))
+    return pool
+
+
+def replay_trace(pool: Pool, cfg: PoolConfig, policy: Policy, ospns, writes,
+                 blocks, *, window: int = DEFAULT_WINDOW) -> Pool:
+    """Replay a (ospn, is_write, block) trace through the pool.
+
+    ``window > 1`` uses the batched front-end; ``window <= 1`` (or a trace
+    shorter than one window) falls back to the serial scan. The trace tail
+    that does not fill a window replays serially. Write accesses carry a
+    zero-block payload (trace replay measures traffic, not data)."""
+    ospns = jnp.asarray(ospns, jnp.int32)
+    writes = jnp.asarray(writes, bool)
+    blocks = jnp.asarray(blocks, jnp.int32)
+    n = int(ospns.shape[0])
+    n_win = n // window if window > 1 else 0
+    if n_win == 0:
+        return _replay_serial(pool, cfg, policy, ospns, writes, blocks)
+    head = n_win * window
+    pool = _replay_windows(pool, cfg, policy,
+                           ospns[:head].reshape(n_win, window),
+                           writes[:head].reshape(n_win, window),
+                           blocks[:head].reshape(n_win, window))
+    if head < n:
+        pool = _replay_serial(pool, cfg, policy, ospns[head:], writes[head:],
+                              blocks[head:])
+    return pool

@@ -1,0 +1,228 @@
+"""Policy layer (DESIGN.md §5): per-scheme residency + accounting decisions.
+
+A ``Policy`` owns everything that differs *between the compared designs*
+(paper §5/§6) while ``engine.ops`` owns the shared mechanisms:
+
+  * **promotion trigger** — which block states promote on access;
+  * **victim selection**  — how a demotion victim is chosen (the pool's clock
+    engine; the serving engine reuses the same shape at lane granularity via
+    ``SecondChanceLanes``);
+  * **residency/traffic accounting** — hooks called at the *site* where a
+    scheme's extra traffic physically occurs (LRU-list node updates, dual
+    metadata-table probes, zsmalloc fragmentation bookkeeping, migration
+    granularity multipliers). This replaces the old ``simx.engine._finalize``
+    post-hoc counter arithmetic: traffic is counted where it happens.
+
+Policies are frozen dataclasses so they hash and can be closed over by
+``jax.jit`` as static arguments; hooks are pure jit-traceable functions of the
+counters array.
+
+Schemes (paper §5/§6):
+  ibex        full IBEX (shadow + co-location + compaction, clock demotion);
+              the Fig. 13 ablation ladder (ibex_base/_s/_sc/_scm) is the same
+              policy with mechanism toggles flipped
+  tmcc        4KB blocks, variable-size chunks (zsmalloc bookkeeping +
+              fragmentation reclaim traffic), list-based recency, no shadow
+  dylect      tmcc + dual metadata tables (2nd probe per mcache miss)
+  mxt         4KB promotion cache with on-chip tags (no activity traffic)
+              but page-granular promotion, no zero elision
+  dmc         32KB migration granularity (promotion/demotion traffic x8)
+  compresso   line-level: no promotion machinery at all, low ratio
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core import activity as act
+from repro.core.engine.state import (C_ACT_WR, C_DEMO_WR, C_META_RD,
+                                     C_META_WR, bump)
+
+
+@dataclass(frozen=True)
+class Policy:
+    """Base policy: pure IBEX behavior. Subclasses override hooks to charge
+    their design's extra traffic in place."""
+    name: str = "ibex"
+    # mechanism toggles the policy requires of its PoolConfig (ablation S/C/M)
+    coloc: bool = True
+    shadow: bool = True
+    compact: bool = True
+    zero_elision: bool = True
+    # device-model knob: 4KB-block schemes pay 4x compression-engine latency
+    block4k_engine: bool = False
+    # line-level schemes bypass the pool entirely (no promotion machinery)
+    line_level: bool = False
+
+    # -- accounting hooks (pure: counters -> counters) ----------------------
+
+    def on_host_access(self, counters: jnp.ndarray, is_write, n=1
+                       ) -> jnp.ndarray:
+        """Per host access, at access time (e.g. recency-list maintenance)."""
+        return counters
+
+    def on_mcache_miss(self, counters: jnp.ndarray, n=1) -> jnp.ndarray:
+        """Extra traffic per metadata-cache miss (e.g. a second table probe);
+        ``n`` misses at once from the batched front-end. The base metadata
+        read itself is mechanism traffic (ops.mcache_step)."""
+        return counters
+
+    def on_compress_store(self, counters: jnp.ndarray) -> jnp.ndarray:
+        """Per compressed-page store (dirty demotion or recompression)."""
+        return counters
+
+    def on_demotion(self, counters: jnp.ndarray, clean) -> jnp.ndarray:
+        """Per demotion, after the mechanism's own traffic is charged."""
+        return counters
+
+    def charge_activity(self, counters: jnp.ndarray, idx: int, n=1
+                        ) -> jnp.ndarray:
+        """Activity-region traffic (clock scans, lazy reference updates).
+        Schemes with on-chip recency state suppress this."""
+        return bump(counters, idx, n)
+
+    def charge_migration(self, counters: jnp.ndarray, idx: int, n=1
+                         ) -> jnp.ndarray:
+        """Promotion/demotion data movement (promo_rd/wr, demo_rd/wr).
+        Coarser migration granularity multiplies it."""
+        return bump(counters, idx, n)
+
+    # -- residency decisions ------------------------------------------------
+
+    def select_victim(self, activity: jnp.ndarray, hand: jnp.ndarray, cache,
+                      rng: jnp.ndarray, force=False) -> act.ScanResult:
+        """Victim selection: the §4.4 second-chance clock over the activity
+        region. (The serving engine applies the same policy shape at lane
+        granularity — see ``SecondChanceLanes``.)"""
+        return act.clock_scan(activity, hand, cache, rng, force=force)
+
+
+@dataclass(frozen=True)
+class IbexPolicy(Policy):
+    """Full IBEX. Ablation rungs are mechanism toggles on the same policy."""
+
+
+@dataclass(frozen=True)
+class TmccPolicy(Policy):
+    """TMCC: 4KB blocks, zsmalloc-style variable chunks, LRU-list recency.
+
+    Extra traffic charged where it occurs:
+      * one recency-list node update per host access (list-based LRU);
+      * two bookkeeping writes per compressed-page store (zspage alloc maps);
+      * one reclaim access per demotion (fragmentation compaction).
+    """
+    name: str = "tmcc"
+    coloc: bool = False
+    shadow: bool = False
+    block4k_engine: bool = True
+
+    def on_host_access(self, counters, is_write, n=1):
+        return bump(counters, C_ACT_WR, n)
+
+    def on_compress_store(self, counters):
+        return bump(counters, C_META_WR, 2)
+
+    def on_demotion(self, counters, clean):
+        return bump(counters, C_DEMO_WR, 1)
+
+
+@dataclass(frozen=True)
+class DylectPolicy(TmccPolicy):
+    """DyLeCT: TMCC plus dual metadata tables — every metadata-cache miss
+    probes both tables (one extra metadata read at the miss site)."""
+    name: str = "dylect"
+
+    def on_mcache_miss(self, counters, n=1):
+        return bump(counters, C_META_RD, n)
+
+
+@dataclass(frozen=True)
+class MxtPolicy(Policy):
+    """MXT-style 4KB promotion cache with on-chip tags: recency state never
+    touches device memory, so activity traffic is suppressed at the charge
+    site; page-granular promotion, no zero elision."""
+    name: str = "mxt"
+    coloc: bool = False
+    zero_elision: bool = False
+    block4k_engine: bool = True
+
+    def charge_activity(self, counters, idx, n=1):
+        return counters
+
+
+@dataclass(frozen=True)
+class DmcPolicy(Policy):
+    """DMC: 32KB migration granularity — every promotion/demotion moves 8x
+    the data, charged at the movement site."""
+    name: str = "dmc"
+    coloc: bool = False
+    shadow: bool = False
+    block4k_engine: bool = True
+    migrate_mult: int = 8
+
+    def charge_migration(self, counters, idx, n=1):
+        return bump(counters, idx, jnp.asarray(n) * self.migrate_mult)
+
+
+@dataclass(frozen=True)
+class CompressoPolicy(Policy):
+    """Compresso: line-level compression, no promotion machinery. The simx
+    engine routes this through its dedicated line-level model."""
+    name: str = "compresso"
+    line_level: bool = True
+
+
+DEFAULT_POLICY = IbexPolicy()
+
+POLICIES: Dict[str, Policy] = {
+    "ibex": IbexPolicy(),
+    "ibex_base": dataclasses.replace(IbexPolicy(), name="ibex_base",
+                                     coloc=False, shadow=False, compact=False,
+                                     block4k_engine=True),
+    "ibex_s": dataclasses.replace(IbexPolicy(), name="ibex_s", coloc=False,
+                                  shadow=True, compact=False,
+                                  block4k_engine=True),
+    "ibex_sc": dataclasses.replace(IbexPolicy(), name="ibex_sc", coloc=True,
+                                   shadow=True, compact=False),
+    "ibex_scm": dataclasses.replace(IbexPolicy(), name="ibex_scm", coloc=True,
+                                    shadow=True, compact=True),
+    "tmcc": TmccPolicy(),
+    "dylect": DylectPolicy(),
+    "mxt": MxtPolicy(),
+    "dmc": DmcPolicy(),
+    "compresso": CompressoPolicy(),
+}
+
+
+class SecondChanceLanes:
+    """The §4.4 second-chance victim-selection policy at *lane* (request)
+    granularity, used by the serving engine: reference bit = "generated a
+    token since last sweep". Mirrors ``Policy.select_victim`` over Python
+    lane state instead of the activity region, including the bounded sweep +
+    round-robin fallback (the paper's random fallback)."""
+
+    def __init__(self, n_lanes: int):
+        self.n = n_lanes
+        self.hand = 0
+
+    def select(self, occupied: Callable[[int], bool],
+               referenced: Callable[[int], bool],
+               clear: Callable[[int], None]) -> Optional[int]:
+        for _ in range(2 * self.n):
+            lane = self.hand
+            self.hand = (self.hand + 1) % self.n
+            if not occupied(lane):
+                continue
+            if referenced(lane):
+                clear(lane)
+            else:
+                return lane
+        # all referenced: round-robin fallback (the paper's random fallback)
+        for off in range(self.n):
+            lane = (self.hand + off) % self.n
+            if occupied(lane):
+                return lane
+        return None

@@ -58,6 +58,61 @@ def access(mc: MCache, ospn: jnp.ndarray) -> Tuple[MCache, jnp.ndarray, jnp.ndar
             hit, evicted.astype(jnp.int32))
 
 
+_BIG = jnp.int32(1 << 20)   # "never selected" recency score
+
+
+def access_window(mc: MCache, ospns: jnp.ndarray
+                  ) -> Tuple[MCache, jnp.ndarray, jnp.ndarray]:
+    """Touch a window of W OSPNs at once (the batched front-end's vectorized
+    metadata probe). Returns (new_cache, hits bool[W], evicted int32[sets,
+    ways+W], -1 padded).
+
+    Window-granular recency model: every access probes the window-start
+    state (an access whose page appeared *earlier in the window* counts as a
+    hit — the serial engine would have just inserted it); insertions and LRU
+    updates are applied once per window by ranking, per set, the existing
+    entries against the window's touches (later touch = more recent, every
+    touch more recent than every untouched entry) and keeping the top
+    ``ways``. This coarsens intra-window LRU ordering relative to the serial
+    one-access-at-a-time walk — hit/miss totals agree within noise — in
+    exchange for a fully vectorized update.
+    """
+    sets, ways = mc.tags.shape
+    w = ospns.shape[0]
+    ospns = jnp.asarray(ospns, jnp.int32)
+    s = _set_index(ospns, sets)                                   # [W]
+    in0 = jnp.any(mc.tags[s] == ospns[:, None], axis=1)           # [W]
+    idx = jnp.arange(w)
+    same = ospns[:, None] == ospns[None, :]
+    dup = jnp.any(same & (idx[None, :] < idx[:, None]), axis=1)   # [W]
+    hits = in0 | dup
+
+    # per-set candidate ranking: existing entries score = age (0 = MRU),
+    # window touch i scores -(i+1) (later = more recent, all beat existing)
+    keep_w = ~jnp.any(same & (idx[None, :] > idx[:, None]), axis=1)  # last occurrence
+    set_ids = jnp.arange(sets)
+    win_in_set = (s[None, :] == set_ids[:, None]) & keep_w[None, :]  # [sets, W]
+    win_tags = jnp.where(win_in_set, ospns[None, :], -1)
+    win_score = jnp.where(win_in_set, -(idx[None, :] + 1), _BIG)
+    # existing copies of re-touched pages are superseded by their window copy
+    touched = jnp.any((mc.tags[:, :, None] == win_tags[:, None, :]) &
+                      (win_tags[:, None, :] >= 0), axis=2)         # [sets, ways]
+    ex_valid = (mc.tags >= 0) & (~touched)
+    ex_tags = jnp.where(ex_valid, mc.tags, -1)
+    ex_score = jnp.where(ex_valid, mc.age, _BIG)
+    cand_tags = jnp.concatenate([ex_tags, win_tags], axis=1)       # [sets, ways+W]
+    cand_score = jnp.concatenate([ex_score, win_score], axis=1)
+    order = jnp.argsort(cand_score, axis=1)
+    ranked_tags = jnp.take_along_axis(cand_tags, order, axis=1)
+    ranked_score = jnp.take_along_axis(cand_score, order, axis=1)
+    new_tags = jnp.where(ranked_score[:, :ways] < _BIG,
+                         ranked_tags[:, :ways], -1)
+    new_age = jnp.tile(jnp.arange(ways, dtype=jnp.int32), (sets, 1))
+    evicted = jnp.where(ranked_score >= _BIG, -1,
+                        ranked_tags).at[:, :ways].set(-1)
+    return MCache(new_tags, new_age), hits, evicted
+
+
 def probe(mc: MCache, ospn: jnp.ndarray) -> jnp.ndarray:
     """Non-destructive residency check (used by the demotion engine)."""
     s = _set_index(ospn, mc.tags.shape[0])

@@ -1,804 +1,70 @@
-"""The IBEX pool: promotion-based block-level compressed memory (§4).
+"""Compatibility shim — the pool monolith now lives in ``repro.core.engine``
+(DESIGN.md §1): ``engine.state`` (regions + counters), ``engine.ops``
+(mechanisms), ``engine.policy`` (scheme policies), ``engine.batch`` (batched
+access front-end).
 
-Functional state machine over four device-memory regions (DESIGN.md §3):
-  * ``p_store``  — promoted region (uncompressed P-chunks, 4KB)
-  * ``c_store``  — compressed region (512B C-chunks; an aligned-group tail
-                   sub-region serves incompressible pages behind one pointer)
-  * ``meta``     — 32B compacted metadata entries (metadata.py)
-  * ``activity`` — 4B page-activity entries + clock hand (activity.py)
-
-plus the metadata-cache model that drives lazy reference updates, and traffic
-counters in 64B-access units (the paper's measurement unit).
-
-State-machine invariants (enforced by tests/test_pool_properties.py):
-  I1  every C-chunk is free XOR referenced by exactly one page
-  I2  promoted(page) <=> P-chunk allocated <=> activity entry allocated
-  I3  dirty <=> num_chunks == 0 for promoted pages (no compressed copy)
-  I4  clean promoted pages have shadow_valid=1 and intact chunks (§4.5)
-  I5  read-your-writes at block granularity
+This module preserves the old cfg-only call signatures by closing over the
+default (IBEX) policy. New code should import from ``repro.core.engine``;
+this shim is kept for one PR.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.common.types import PoolConfig
-from repro.core import activity as act
-from repro.core import compressor as comp
-from repro.core import freelist as fl
-from repro.core import mcache as mcc
-from repro.core import metadata as md
-from repro.core.bitpack import RATE_RAW, RATE_ZERO
+from repro.core.engine import ops as _ops
+from repro.core.engine.policy import DEFAULT_POLICY
+from repro.core.engine.state import (C_ACT_RD, C_ACT_WR, C_DATA_RD, C_DATA_WR,
+                                     C_DEMO_CLEAN, C_DEMO_DIRTY, C_DEMO_RD,
+                                     C_DEMO_WR, C_HOST_RD, C_HOST_WR,
+                                     C_MC_HIT, C_MC_MISS, C_META_RD,
+                                     C_META_WR, C_PROMO_RD, C_PROMO_WR,
+                                     C_PROMOTIONS, C_RANDOM_FB,
+                                     C_RECOMP_RETRY, C_ZERO_SERVED,
+                                     COUNTER_NAMES, CTR_DTYPE, NUM_COUNTERS,
+                                     Pool, compression_ratio, counters_dict,
+                                     make_pool, n_single_chunks, total_traffic)
 
-# ---------------------------------------------------------------------------
-# Traffic counters (64B-access units unless noted).
-# ---------------------------------------------------------------------------
-C_META_RD, C_META_WR, C_DATA_RD, C_DATA_WR, C_PROMO_RD, C_PROMO_WR, \
-    C_DEMO_RD, C_DEMO_WR, C_ACT_RD, C_ACT_WR, C_ZERO_SERVED, C_RANDOM_FB, \
-    C_DEMO_CLEAN, C_DEMO_DIRTY, C_PROMOTIONS, C_HOST_RD, C_HOST_WR, \
-    C_MC_HIT, C_MC_MISS, C_RECOMP_RETRY, NUM_COUNTERS = range(21)
-
-CTR_DTYPE = jnp.int32  # 64B-access counts; int32 suffices at test/sim scale
-
-COUNTER_NAMES = [
-    "metadata_rd", "metadata_wr", "data_rd", "data_wr", "promo_rd", "promo_wr",
-    "demo_rd", "demo_wr", "activity_rd", "activity_wr", "zero_served",
-    "random_fallback", "demotions_clean", "demotions_dirty", "promotions",
-    "host_reads", "host_writes", "mcache_hits", "mcache_misses",
-    "recompress_retry",
+__all__ = [
+    "Pool", "make_pool", "n_single_chunks", "compression_ratio",
+    "counters_dict", "total_traffic", "COUNTER_NAMES", "NUM_COUNTERS",
+    "CTR_DTYPE", "host_write_page", "host_read_block", "host_write_block",
+    "demote_one", "demote_if_needed",
 ]
 
 
-class Pool(NamedTuple):
-    meta: jnp.ndarray        # uint32[n_pages, 8]
-    activity: jnp.ndarray    # uint32[n_pchunks]
-    hand: jnp.ndarray        # int32[]
-    cfree: fl.FreeList       # single C-chunks
-    gfree: fl.FreeList       # aligned 8-chunk groups (values = base chunk idx)
-    pfree: fl.FreeList       # P-chunks
-    cache: mcc.MCache
-    counters: jnp.ndarray    # int64[NUM_COUNTERS]
-    rng: jnp.ndarray
-    c_store: jnp.ndarray     # uint8[n_chunks_total, chunk_bytes] (or [0, _])
-    p_store: jnp.ndarray     # uint8[n_pchunks, page_bytes]       (or [0, _])
-    rates_table: jnp.ndarray  # int32[n_pages, 4] content model — used instead
-    #                           of encode_page when store_payload=False (simx)
+def _default_policy_host_write_page(pool: Pool, cfg: PoolConfig, ospn,
+                                    vals: jnp.ndarray) -> Pool:
+    return _ops._host_write_page(pool, cfg, DEFAULT_POLICY, ospn, vals)
 
 
-def n_single_chunks(cfg: PoolConfig) -> int:
-    """Compressed region split: 7/8 singles, 1/8 aligned groups (static)."""
-    return (cfg.n_cchunks * 7 // 8) // 8 * 8
+def _default_policy_host_read_block(pool: Pool, cfg: PoolConfig, ospn,
+                                    block_idx) -> Tuple[Pool, jnp.ndarray]:
+    return _ops._host_read_block(pool, cfg, DEFAULT_POLICY, ospn, block_idx)
 
 
-def make_pool(cfg: PoolConfig, seed: int = 0,
-              rates_table: jnp.ndarray | None = None) -> Pool:
-    n_single = n_single_chunks(cfg)
-    n_groups = (cfg.n_cchunks - n_single) // 8
-    gbases = jnp.asarray(n_single, jnp.int32) + 8 * jnp.arange(n_groups, dtype=jnp.int32)
-    pay_c = cfg.n_cchunks if cfg.store_payload else 0
-    pay_p = cfg.n_pchunks if cfg.store_payload else 0
-    if rates_table is None:
-        rates_table = jnp.zeros((cfg.n_pages, cfg.blocks_per_page), jnp.int32)
-    return Pool(
-        meta=md.empty_table(cfg.n_pages),
-        activity=jnp.zeros((cfg.n_pchunks,), jnp.uint32),
-        hand=jnp.asarray(0, jnp.int32),
-        cfree=fl.make_freelist(n_single),
-        gfree=fl.FreeList(items=gbases, top=jnp.asarray(n_groups, jnp.int32)),
-        pfree=fl.make_freelist(cfg.n_pchunks),
-        cache=mcc.make_mcache(cfg.mcache_sets, cfg.mcache_ways),
-        counters=jnp.zeros((NUM_COUNTERS,), CTR_DTYPE),
-        rng=jax.random.PRNGKey(seed),
-        c_store=jnp.zeros((pay_c, cfg.chunk_bytes), jnp.uint8),
-        p_store=jnp.zeros((pay_p, cfg.page_bytes), jnp.uint8),
-        rates_table=jnp.asarray(rates_table, jnp.int32),
-    )
+def _default_policy_host_write_block(pool: Pool, cfg: PoolConfig, ospn,
+                                     block_idx, vals: jnp.ndarray) -> Pool:
+    return _ops._host_write_block(pool, cfg, DEFAULT_POLICY, ospn, block_idx,
+                                  vals)
 
 
-def _content_rates(pool: Pool, cfg: PoolConfig, ospn) -> jnp.ndarray:
-    """Per-block rates from the content model (simx, payload-less mode)."""
-    r = pool.rates_table[ospn]
-    if not cfg.zero_elision:
-        r = jnp.maximum(r, 1)
-    if cfg.coloc:
-        return r
-    # 4KB-block mode: one rate for the whole page (zero only if all-zero)
-    return jnp.max(r, keepdims=True)[:1]
+host_write_page = functools.partial(jax.jit, static_argnums=(1,))(
+    _default_policy_host_write_page)
+host_read_block = functools.partial(jax.jit, static_argnums=(1,))(
+    _default_policy_host_read_block)
+host_write_block = functools.partial(jax.jit, static_argnums=(1,))(
+    _default_policy_host_write_block)
 
-
-def _rates_to_chunks(rates: jnp.ndarray, cfg: PoolConfig):
-    """(quanta_total, num_chunks) for a page with these block rates."""
-    nblocks = rates.shape[0]
-    vals = cfg.vals_per_page // nblocks
-    qt = comp.block_quanta_table(vals)
-    quanta = jnp.sum(qt[rates])
-    qpc = cfg.chunk_bytes // comp.QUANTUM
-    return quanta, (-(-quanta // qpc)).astype(jnp.uint32)
-
-
-def _bump(counters: jnp.ndarray, idx: int, n=1) -> jnp.ndarray:
-    return counters.at[idx].add(jnp.asarray(n, CTR_DTYPE))
-
-
-def _meta_width(cfg: PoolConfig, ospn) -> jnp.ndarray:
-    """64B accesses per metadata fetch: 1 compacted; uncompacted 283b entries
-    straddle the 64B boundary for ~half of all pages (§4.7)."""
-    if cfg.compact:
-        return jnp.asarray(1, CTR_DTYPE)
-    return (1 + (jnp.asarray(ospn, CTR_DTYPE) & 1))
-
-
-# ---------------------------------------------------------------------------
-# Metadata-cache step with lazy reference update (§4.4).
-# ---------------------------------------------------------------------------
-
-def _mcache_step(pool: Pool, cfg: PoolConfig, ospn) -> Tuple[Pool, jnp.ndarray]:
-    cache, hit, evicted = mcc.access(pool.cache, ospn)
-    counters = jax.lax.select(hit, _bump(pool.counters, C_MC_HIT),
-                              _bump(_bump(pool.counters, C_MC_MISS),
-                                    C_META_RD, _meta_width(cfg, ospn)))
-    # lazy update: evicted page, if promoted, gets its referenced bit set now
-    safe_ev = jnp.maximum(evicted, 0)
-    ev_entry = pool.meta[safe_ev]
-    ev_promoted = (md.get_promoted(ev_entry[0]) == 1) & (evicted >= 0) & \
-        (md.get_valid(ev_entry[0]) == 1)
-    ev_pidx = md.get_ptr(ev_entry, md.PCHUNK_SLOT).astype(jnp.int32)
-    new_act = act.lazy_touch(pool.activity, jnp.where(ev_promoted, ev_pidx, -1))
-    counters = jax.lax.select(ev_promoted, _bump(counters, C_ACT_WR), counters)
-    return pool._replace(cache=cache, activity=new_act, counters=counters), hit
-
-
-# ---------------------------------------------------------------------------
-# Payload helpers (no-ops when store_payload=False).
-# ---------------------------------------------------------------------------
-
-def _chunk_ptrs(entry: jnp.ndarray) -> jnp.ndarray:
-    """int32[7] pointer slots 0..6 (slot 6 doubles as the P-chunk slot)."""
-    return jnp.stack([md.get_ptr(entry, i) for i in range(7)]).astype(jnp.int32)
-
-
-def _gather_page_buf(pool: Pool, cfg: PoolConfig, entry: jnp.ndarray) -> jnp.ndarray:
-    """Reassemble the compacted compressed-page buffer from its chunks."""
-    if not cfg.store_payload:
-        return jnp.zeros((cfg.page_bytes,), jnp.uint8)
-    w0 = entry[0]
-    nchunks = md.get_num_chunks(w0).astype(jnp.int32)
-    is_group = nchunks == 8                      # incompressible: aligned group
-    ptrs = _chunk_ptrs(entry)
-    base = ptrs[0]
-    cpp = cfg.chunks_per_page
-    idxs = []
-    for i in range(cpp):
-        single = ptrs[min(i, 6)]
-        grp = base + i
-        idx = jnp.where(is_group, grp, jnp.where(i < nchunks, single, 0))
-        idxs.append(jnp.clip(idx, 0, pool.c_store.shape[0] - 1))
-    chunks = pool.c_store[jnp.stack(idxs)]       # [cpp, chunk_bytes]
-    return chunks.reshape(cfg.page_bytes)
-
-
-def _scatter_page_buf(pool: Pool, cfg: PoolConfig, buf: jnp.ndarray,
-                      ptrs: jnp.ndarray, nchunks, is_group) -> Pool:
-    if not cfg.store_payload:
-        return pool
-    cpp = cfg.chunks_per_page
-    pieces = buf.reshape(cpp, cfg.chunk_bytes)
-    c_store = pool.c_store
-    base = ptrs[0]
-    for i in range(cpp):
-        idx = jnp.where(is_group, base + i, ptrs[min(i, 6)])
-        idx = jnp.clip(idx, 0, c_store.shape[0] - 1)
-        write = is_group | (i < nchunks)
-        c_store = jax.lax.select(write, c_store.at[idx].set(pieces[i]), c_store)
-    return pool._replace(c_store=c_store)
-
-
-def _read_pchunk_block(pool: Pool, cfg: PoolConfig, pidx, block_idx) -> jnp.ndarray:
-    if not cfg.store_payload:
-        return jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
-    safe = jnp.clip(pidx, 0, max(pool.p_store.shape[0] - 1, 0))
-    page = pool.p_store[safe]
-    b = jax.lax.dynamic_slice(page, (block_idx * cfg.block_bytes,),
-                              (cfg.block_bytes,))
-    from repro.core.bitpack import bytes_to_raw
-    return bytes_to_raw(b)
-
-
-def _write_pchunk_block(pool: Pool, cfg: PoolConfig, pidx, block_idx,
-                        vals: jnp.ndarray) -> Pool:
-    if not cfg.store_payload:
-        return pool
-    from repro.core.bitpack import raw_to_bytes
-    safe = jnp.clip(pidx, 0, max(pool.p_store.shape[0] - 1, 0))
-    page = pool.p_store[safe]
-    page = jax.lax.dynamic_update_slice(page, raw_to_bytes(vals),
-                                        (block_idx * cfg.block_bytes,))
-    return pool._replace(p_store=pool.p_store.at[safe].set(page))
-
-
-# ---------------------------------------------------------------------------
-# Chunk (de)allocation.
-# ---------------------------------------------------------------------------
-
-def _alloc_chunks(pool: Pool, cfg: PoolConfig, num_chunks) -> Tuple[Pool, jnp.ndarray, jnp.ndarray]:
-    """Allocate ``num_chunks`` C-chunks (8 -> one aligned group). Returns
-    (pool, ptrs int32[7], is_group)."""
-    is_group = num_chunks >= 8
-
-    def alloc_group(p: Pool):
-        g, base = fl.pop(p.gfree)
-        ptrs = jnp.full((7,), -1, jnp.int32).at[0].set(base)
-        return p._replace(gfree=g), ptrs
-
-    def alloc_singles(p: Pool):
-        c, idxs = fl.pop_n(p.cfree, 7, jnp.minimum(num_chunks, 7))
-        return p._replace(cfree=c), idxs
-
-    poolg, ptrsg = alloc_group(pool)
-    pools, ptrss = alloc_singles(pool)
-    pool_out = jax.tree_util.tree_map(
-        lambda a, b: jax.lax.select(is_group, a, b), poolg, pools)
-    ptrs = jnp.where(is_group, ptrsg, ptrss)
-    return pool_out, ptrs, is_group
-
-
-def _free_chunks(pool: Pool, cfg: PoolConfig, entry: jnp.ndarray) -> Pool:
-    """Release all C-chunks referenced by ``entry`` (no-op if none)."""
-    w0 = entry[0]
-    nchunks = md.get_num_chunks(w0).astype(jnp.int32)
-    is_group = nchunks == 8
-    ptrs = _chunk_ptrs(entry)
-
-    def free_group(p: Pool):
-        return p._replace(gfree=fl.push(p.gfree, ptrs[0]))
-
-    def free_singles(p: Pool):
-        masked = jnp.where(jnp.arange(7) < nchunks, ptrs, -1)
-        return p._replace(cfree=fl.push_n(p.cfree, masked))
-
-    has = nchunks > 0
-    pg = free_group(pool)
-    ps = free_singles(pool)
-    out = jax.tree_util.tree_map(lambda a, b: jax.lax.select(is_group, a, b), pg, ps)
-    return jax.tree_util.tree_map(lambda a, b: jax.lax.select(has, a, b), out, pool)
-
-
-# ---------------------------------------------------------------------------
-# Demotion (§4.4 + §4.5).
-# ---------------------------------------------------------------------------
 
 def demote_one(pool: Pool, cfg: PoolConfig, force=False) -> Pool:
-    """Run the clock engine once and demote the selected victim."""
-    rng, sub = jax.random.split(pool.rng)
-    res = act.clock_scan(pool.activity, pool.hand, pool.cache, sub, force=force)
-    counters = _bump(pool.counters, C_ACT_RD, res.groups_scanned.astype(CTR_DTYPE))
-    counters = _bump(counters, C_ACT_WR, res.groups_scanned.astype(CTR_DTYPE))
-    counters = jax.lax.select(res.used_random, _bump(counters, C_RANDOM_FB), counters)
-    pool = pool._replace(activity=res.activity, hand=res.hand, rng=rng,
-                         counters=counters)
-    have = res.victim_ospn >= 0
-
-    def do_demote(p: Pool) -> Pool:
-        ospn = jnp.maximum(res.victim_ospn, 0)
-        entry = p.meta[ospn]
-        w0 = entry[0]
-        clean = (md.get_dirty(w0) == 0) & (md.get_shadow_valid(w0) == 1)
-
-        def demote_clean(p: Pool) -> Pool:
-            # §4.5: re-validate shadow pointers by flipping type fields only.
-            nblocks = cfg.blocks_per_page if cfg.coloc else 1
-            raw_sz = 7 if cfg.coloc else RATE_RAW  # non-coloc sz holds the rate
-            w = w0
-            for i in range(nblocks):
-                bt = md.get_block_type(w, i)
-                sz = md.get_block_sz(w, i)
-                restored = jnp.where(sz == raw_sz, md.BT_INCOMP, md.BT_COMP)
-                w = md.set_block_type(w, i, jnp.where(bt == md.BT_PROM, restored, bt))
-            w = md.set_promoted(w, 0)
-            w = md.set_shadow_valid(w, 0)
-            new_entry = entry.at[0].set(w)
-            c = _bump(p.counters, C_META_WR, _meta_width(cfg, ospn))
-            c = _bump(c, C_DEMO_CLEAN)
-            return p._replace(meta=p.meta.at[ospn].set(new_entry), counters=c)
-
-        def demote_dirty(p: Pool) -> Pool:
-            # read the promoted page, recompress, store chunks (§4.2 cost).
-            pidx = md.get_ptr(entry, md.PCHUNK_SLOT).astype(jnp.int32)
-            if cfg.store_payload:
-                safe = jnp.clip(pidx, 0, max(p.p_store.shape[0] - 1, 0))
-                from repro.core.bitpack import bytes_to_raw
-                vals = bytes_to_raw(p.p_store[safe])
-                buf, rates, quanta, nchunks = comp.encode_page(vals, cfg)
-            else:
-                # metadata-only mode: compressed sizes come from the content
-                # model instead of actual bytes (simx)
-                buf = jnp.zeros((cfg.page_bytes,), jnp.uint8)
-                rates = _content_rates(p, cfg, ospn)
-                _, nchunks = _rates_to_chunks(rates, cfg)
-            p, ptrs, is_group = _alloc_chunks(p, cfg, nchunks)
-            p = _scatter_page_buf(p, cfg, buf, ptrs, nchunks, is_group)
-            w = md.header_from_rates(rates) if cfg.coloc else \
-                _header_4kb(rates[0], nchunks)
-            w = md.set_num_chunks(w, nchunks)
-            new_entry = md.empty_entry().at[0].set(w)
-            for i in range(7):
-                new_entry = md.set_ptr(new_entry, i, jnp.maximum(ptrs[i], 0))
-            c = _bump(p.counters, C_DEMO_RD, cfg.page_bytes // 64)
-            c = _bump(c, C_DEMO_WR, (nchunks * (cfg.chunk_bytes // 64)).astype(CTR_DTYPE))
-            c = _bump(c, C_META_WR, _meta_width(cfg, ospn))
-            c = _bump(c, C_DEMO_DIRTY)
-            return p._replace(meta=p.meta.at[ospn].set(new_entry), counters=c)
-
-        p = jax.lax.cond(clean, demote_clean, demote_dirty, p)
-        # free the P-chunk + activity entry in both cases
-        pidx = md.get_ptr(entry, md.PCHUNK_SLOT).astype(jnp.int32)
-        p = p._replace(pfree=fl.push(p.pfree, pidx),
-                       activity=act.mark_free(p.activity, pidx))
-        return p
-
-    return jax.lax.cond(have, do_demote, lambda p: p, pool)
+    return _ops.demote_one(pool, cfg, DEFAULT_POLICY, force=force)
 
 
 def demote_if_needed(pool: Pool, cfg: PoolConfig, max_demotes: int = 2) -> Pool:
-    """Keep >= watermark free P-chunks (the paper's background engine, amortized
-    into the request path: at most ``max_demotes`` per host op)."""
-    def body(i, p):
-        need = fl.free_count(p.pfree) < cfg.demote_watermark
-        return jax.lax.cond(need, lambda q: demote_one(q, cfg), lambda q: q, p)
-    return jax.lax.fori_loop(0, max_demotes, body, pool)
-
-
-def _ensure_free_pchunk(pool: Pool, cfg: PoolConfig, tries: int = 4) -> Pool:
-    """Guarantee at least one free P-chunk before a promotion pops the list.
-
-    The last attempts *force* the clock's random fallback to consider
-    cache-resident pages — an emergency valve that cannot trigger at the
-    paper's region ratios but keeps small test/sim configs live-safe (a pop
-    from an empty list would alias P-chunk 0 and corrupt another page)."""
-    def body(i, p):
-        need = fl.free_count(p.pfree) == 0
-        return jax.lax.cond(
-            need, lambda q: demote_one(q, cfg, force=(i >= tries // 2)),
-            lambda q: q, p)
-    return jax.lax.fori_loop(0, tries, body, pool)
-
-
-# ---------------------------------------------------------------------------
-# Promotion (§4.1, §4.5, §4.6).
-# ---------------------------------------------------------------------------
-
-def _header_4kb(rate, nchunks) -> jnp.ndarray:
-    """word0 for co-location-disabled mode: rate kept in block_sz[0]."""
-    w = jnp.uint32(0)
-    w = md.set_block_type(w, 0, jnp.where(rate == RATE_ZERO, md.BT_ZERO,
-                          jnp.where(rate == RATE_RAW, md.BT_INCOMP, md.BT_COMP)))
-    w = md.set_block_sz(w, 0, rate)
-    w = md.set_valid(w, 1)
-    return w
-
-
-def _rates_of(entry: jnp.ndarray, cfg: PoolConfig) -> jnp.ndarray:
-    if cfg.coloc:
-        return md.rates_from_header(entry[0], cfg.blocks_per_page)
-    return md.get_block_sz(entry[0], 0).astype(jnp.int32)[None]
-
-
-def _promote(pool: Pool, cfg: PoolConfig, ospn, block_idx) -> Pool:
-    """Promote page ``ospn`` (fine-grained: materialize only ``block_idx``
-    when the shadow can be kept; see DESIGN.md for the 7-chunk exception)."""
-    already = md.get_promoted(pool.meta[ospn][0]) == 1
-    # guarantee a free P-chunk first; demotion only touches *promoted* pages,
-    # and ospn is not promoted on this path, so the entry below stays fresh.
-    pool = jax.lax.cond(already, lambda p: p,
-                        lambda p: _ensure_free_pchunk(p, cfg), pool)
-    entry = pool.meta[ospn]
-    w0 = entry[0]
-    nchunks = md.get_num_chunks(w0).astype(jnp.int32)
-
-    pfree, pidx_new = fl.pop(pool.pfree)
-    pidx = jnp.where(already, md.get_ptr(entry, md.PCHUNK_SLOT).astype(jnp.int32),
-                     pidx_new)
-    pool = jax.tree_util.tree_map(
-        lambda a, b: jax.lax.select(already, a, b),
-        pool, pool._replace(pfree=pfree))
-
-    # shadow feasibility: slot 6 must be free for the P-chunk pointer
-    can_shadow = (nchunks <= 6) | (nchunks == 8)
-    full_materialize = (~can_shadow) | (not cfg.coloc)
-
-    rates = _rates_of(entry, cfg)
-    buf = _gather_page_buf(pool, cfg, entry)
-    nblocks = cfg.blocks_per_page if cfg.coloc else 1
-
-    # traffic: chunk reads. fine-grained reads only the target block's quanta.
-    q_all = comp.page_compressed_bytes(rates, cfg.vals_per_page // nblocks) // 64
-    if cfg.coloc:
-        qt = comp.block_quanta_table(cfg.vals_per_block)
-        q_blk = (qt[rates[jnp.minimum(block_idx, nblocks - 1)]] *
-                 (comp.QUANTUM // 64))
-    else:
-        q_blk = q_all
-    rd = jnp.where(full_materialize, q_all, q_blk).astype(CTR_DTYPE)
-    counters = _bump(pool.counters, C_PROMO_RD, rd)
-
-    # materialize into the P-chunk
-    if cfg.store_payload:
-        vals = comp.decode_page(buf, rates, cfg)
-        page_bytes_arr = _page_to_bytes(vals)
-        safe = jnp.clip(pidx, 0, max(pool.p_store.shape[0] - 1, 0))
-        if cfg.coloc:
-            old = pool.p_store[safe]
-            mask = _block_mask(cfg, block_idx, full_materialize)
-            newpage = jnp.where(mask, page_bytes_arr, old)
-        else:
-            newpage = page_bytes_arr
-        p_store = pool.p_store.at[safe].set(newpage)
-        pool = pool._replace(p_store=p_store)
-    wr = jnp.where(full_materialize, cfg.page_bytes // 64,
-                   cfg.block_bytes // 64).astype(CTR_DTYPE)
-    counters = _bump(counters, C_PROMO_WR, wr)
-    counters = _bump(counters, C_PROMOTIONS)
-
-    # metadata update
-    w = w0
-    if cfg.coloc:
-        for i in range(nblocks):
-            is_tgt = (jnp.asarray(block_idx) == i) | full_materialize
-            bt = md.get_block_type(w, i)
-            promote_this = is_tgt & (bt != md.BT_ZERO)
-            w = md.set_block_type(w, i, jnp.where(promote_this, md.BT_PROM, bt))
-    else:
-        w = md.set_block_type(w, 0, md.BT_PROM)
-    w = md.set_promoted(w, 1)
-    keep_shadow = can_shadow & jnp.asarray(cfg.shadow)
-    w = md.set_shadow_valid(w, keep_shadow.astype(jnp.uint32))
-    w = md.set_dirty(w, (~keep_shadow).astype(jnp.uint32))
-    new_entry = entry.at[0].set(w)
-    new_entry = md.set_ptr(new_entry, md.PCHUNK_SLOT, jnp.maximum(pidx, 0))
-
-    # if the shadow cannot be kept (or shadowing disabled), free the chunks now
-    pool = jax.lax.cond(keep_shadow | (nchunks == 0), lambda p: p,
-                        lambda p: _free_chunks(p, cfg, entry), pool)
-    w = jax.lax.select(keep_shadow, md.get_num_chunks(w0), jnp.uint32(0))
-    new_w0 = md.set_num_chunks(new_entry[0], w)
-    new_entry = new_entry.at[0].set(new_w0)
-
-    counters = _bump(counters, C_META_WR, _meta_width(cfg, ospn))
-    pool = pool._replace(meta=pool.meta.at[ospn].set(new_entry),
-                         counters=counters)
-    # activity entry (arrives referenced=1)
-    pool = pool._replace(activity=jax.lax.select(
-        already, pool.activity, act.mark_allocated(pool.activity, pidx, ospn)))
-    return pool
-
-
-def _page_to_bytes(vals: jnp.ndarray) -> jnp.ndarray:
-    from repro.core.bitpack import raw_to_bytes
-    return raw_to_bytes(vals)
-
-
-def _block_mask(cfg: PoolConfig, block_idx, full: jnp.ndarray) -> jnp.ndarray:
-    pos = jnp.arange(cfg.page_bytes, dtype=jnp.int32) // cfg.block_bytes
-    return full | (pos == jnp.asarray(block_idx, jnp.int32))
-
-
-# ---------------------------------------------------------------------------
-# Host-facing ops (block granularity; 64B accounting is analytic).
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def host_write_page(pool: Pool, cfg: PoolConfig, ospn, vals: jnp.ndarray) -> Pool:
-    """First-touch page write: lands uncompressed in the promoted region
-    (promotion-based management stores first-touched data hot, §4)."""
-    pool = demote_if_needed(pool, cfg)
-    pool, _ = _mcache_step(pool, cfg, ospn)
-    was_promoted0 = md.get_promoted(pool.meta[ospn][0]) == 1
-    pool = jax.lax.cond(was_promoted0, lambda p: p,
-                        lambda p: _ensure_free_pchunk(p, cfg), pool)
-    entry = pool.meta[ospn]
-    # free any previous incarnation
-    pool = _free_chunks(pool, cfg, entry)
-    was_promoted = md.get_promoted(entry[0]) == 1
-    old_pidx = md.get_ptr(entry, md.PCHUNK_SLOT).astype(jnp.int32)
-    pfree, pidx_new = fl.pop(pool.pfree)
-    pidx = jnp.where(was_promoted, old_pidx, pidx_new)
-    pool = jax.tree_util.tree_map(
-        lambda a, b: jax.lax.select(was_promoted, a, b),
-        pool, pool._replace(pfree=pfree))
-    if cfg.store_payload:
-        safe = jnp.clip(pidx, 0, max(pool.p_store.shape[0] - 1, 0))
-        pool = pool._replace(p_store=pool.p_store.at[safe].set(_page_to_bytes(vals)))
-    nblocks = cfg.blocks_per_page if cfg.coloc else 1
-    w = jnp.uint32(0)
-    for i in range(nblocks):
-        w = md.set_block_type(w, i, md.BT_PROM)
-        w = md.set_block_sz(w, i, 0)
-    w = md.set_valid(w, 1)
-    w = md.set_promoted(w, 1)
-    w = md.set_dirty(w, 1)
-    new_entry = md.empty_entry().at[0].set(w)
-    new_entry = md.set_ptr(new_entry, md.PCHUNK_SLOT, jnp.maximum(pidx, 0))
-    counters = _bump(pool.counters, C_DATA_WR, cfg.page_bytes // 64)
-    counters = _bump(counters, C_META_WR, _meta_width(cfg, ospn))
-    counters = _bump(counters, C_HOST_WR)
-    pool = pool._replace(meta=pool.meta.at[ospn].set(new_entry), counters=counters)
-    pool = pool._replace(activity=act.mark_allocated(pool.activity, pidx, ospn))
-    return pool
-
-
-def _block_state(entry: jnp.ndarray, cfg: PoolConfig, block_idx):
-    w0 = entry[0]
-    if cfg.coloc:
-        bt = md.get_block_type_dyn(w0, block_idx)
-    else:
-        bt = md.get_block_type(w0, 0)
-    return (md.get_valid(w0) == 1, md.get_promoted(w0) == 1, bt)
-
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def host_read_block(pool: Pool, cfg: PoolConfig, ospn, block_idx
-                    ) -> Tuple[Pool, jnp.ndarray]:
-    """Read one 1KB block (paper Fig. 3 flow). Returns (pool, bf16 values)."""
-    pool = demote_if_needed(pool, cfg)
-    pool, _ = _mcache_step(pool, cfg, ospn)
-    pool = pool._replace(counters=_bump(pool.counters, C_HOST_RD))
-    entry = pool.meta[ospn]
-    valid, promoted, bt = _block_state(entry, cfg, block_idx)
-
-    is_zero = valid & (bt == md.BT_ZERO)
-    is_hot = valid & promoted & (bt == md.BT_PROM)
-    needs_promo = valid & (~is_zero) & (~is_hot)
-
-    def case_zero(p: Pool):
-        return p._replace(counters=_bump(p.counters, C_ZERO_SERVED)), \
-            jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
-
-    def case_hot(p: Pool):
-        pidx = md.get_ptr(entry, md.PCHUNK_SLOT).astype(jnp.int32)
-        vals = _read_pchunk_block(p, cfg, pidx, block_idx)
-        return p._replace(counters=_bump(p.counters, C_DATA_RD,
-                                         cfg.block_bytes // 64)), vals
-
-    def case_promote(p: Pool):
-        p = _promote(p, cfg, ospn, block_idx)
-        e = p.meta[ospn]
-        pidx = md.get_ptr(e, md.PCHUNK_SLOT).astype(jnp.int32)
-        vals = _read_pchunk_block(p, cfg, pidx, block_idx)
-        return p, vals
-
-    def case_invalid(p: Pool):
-        return p, jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
-
-    branch = jnp.where(is_zero, 0, jnp.where(is_hot, 1,
-                       jnp.where(needs_promo, 2, 3))).astype(jnp.int32)
-    pool, vals = jax.lax.switch(branch, [case_zero, case_hot, case_promote,
-                                         case_invalid], pool)
-    return pool, vals
-
-
-@functools.partial(jax.jit, static_argnums=(1,))
-def host_write_block(pool: Pool, cfg: PoolConfig, ospn, block_idx,
-                     vals: jnp.ndarray) -> Pool:
-    """Write one 1KB block. Writes promote (whole-page materialization so the
-    page's chunks can be released — §4.5: updates invalidate the shadow)."""
-    pool = demote_if_needed(pool, cfg)
-    pool, _ = _mcache_step(pool, cfg, ospn)
-    pool = pool._replace(counters=_bump(pool.counters, C_HOST_WR))
-    entry = pool.meta[ospn]
-    w0 = entry[0]
-    valid = md.get_valid(w0) == 1
-
-    def fresh(p: Pool) -> Pool:
-        page = jnp.zeros((cfg.vals_per_page,), jnp.bfloat16)
-        page = jax.lax.dynamic_update_slice(page, vals.astype(jnp.bfloat16),
-                                            (block_idx * cfg.vals_per_block,))
-        # host_write_page applies its own mcache/demote steps; acceptable
-        # double-count is avoided by calling the internals directly instead.
-        return _overwrite_page(p, cfg, ospn, page)
-
-    def write_inplace(p: Pool) -> Pool:
-        """§4.1.2: incompressible (raw, non-promoted) pages are updated in
-        place; wr_cntr counts updates and triggers a recompression attempt at
-        the threshold (the page may have become compressible)."""
-        entry0 = p.meta[ospn]
-        ww = entry0[0]
-        base = md.get_ptr(entry0, 0).astype(jnp.int32)
-        if cfg.store_payload:
-            from repro.core.bitpack import raw_to_bytes
-            bb = raw_to_bytes(vals.astype(jnp.bfloat16))
-            half = cfg.chunk_bytes
-            cpb = cfg.block_bytes // cfg.chunk_bytes  # chunks per block (2)
-            c_store = p.c_store
-            for j in range(cpb):
-                idx = jnp.clip(base + block_idx * cpb + j, 0,
-                               c_store.shape[0] - 1)
-                c_store = c_store.at[idx].set(
-                    jax.lax.dynamic_slice(bb, (j * half,), (half,)))
-            p = p._replace(c_store=c_store)
-        c = _bump(p.counters, C_DATA_WR, cfg.block_bytes // 64)
-        cntr = md.get_wr_cntr(ww)
-        trip = (cntr + 1) >= cfg.wr_thresh
-
-        def retry(q: Pool) -> Pool:
-            # recompression attempt: read the page, re-encode
-            if cfg.store_payload:
-                e = q.meta[ospn]
-                buf0 = _gather_page_buf(q, cfg, e)
-                from repro.core.bitpack import bytes_to_raw
-                pv = bytes_to_raw(buf0)
-                buf, rates, _, nch = comp.encode_page(pv, cfg)
-            else:
-                buf = jnp.zeros((cfg.page_bytes,), jnp.uint8)
-                rates = _content_rates(q, cfg, ospn)
-                _, nch = _rates_to_chunks(rates, cfg)
-            cc = _bump(q.counters, C_DEMO_RD, cfg.page_bytes // 64)
-            cc = _bump(cc, C_RECOMP_RETRY)
-            q = q._replace(counters=cc)
-
-            def compressible(r: Pool) -> Pool:
-                e = r.meta[ospn]
-                r = _free_chunks(r, cfg, e)
-                r, ptrs, is_group = _alloc_chunks(r, cfg, nch)
-                r = _scatter_page_buf(r, cfg, buf, ptrs, nch, is_group)
-                w = md.header_from_rates(rates) if cfg.coloc else \
-                    _header_4kb(rates[0], nch)
-                w = md.set_num_chunks(w, nch)
-                ne = md.empty_entry().at[0].set(w)
-                for i in range(7):
-                    ne = md.set_ptr(ne, i, jnp.maximum(ptrs[i], 0))
-                ccc = _bump(r.counters, C_DEMO_WR,
-                            (nch * (cfg.chunk_bytes // 64)).astype(CTR_DTYPE))
-                ccc = _bump(ccc, C_META_WR, _meta_width(cfg, ospn))
-                return r._replace(meta=r.meta.at[ospn].set(ne), counters=ccc)
-
-            def still_raw(r: Pool) -> Pool:
-                e = r.meta[ospn]
-                w = md.set_wr_cntr(e[0], 0)
-                return r._replace(meta=r.meta.at[ospn].set(e.at[0].set(w)))
-
-            return jax.lax.cond(nch < 8, compressible, still_raw, q)
-
-        def just_count(q: Pool) -> Pool:
-            e = q.meta[ospn]
-            w = md.set_wr_cntr(e[0], cntr + 1)
-            cc = _bump(q.counters, C_META_WR, _meta_width(cfg, ospn))
-            return q._replace(meta=q.meta.at[ospn].set(e.at[0].set(w)),
-                              counters=cc)
-
-        p = p._replace(counters=c)
-        return jax.lax.cond(trip, retry, just_count, p)
-
-    def update(p: Pool) -> Pool:
-        promoted = md.get_promoted(w0) == 1
-        is_incomp_resident = (~promoted) & (md.get_num_chunks(w0) == 8)
-        return jax.lax.cond(is_incomp_resident, write_inplace,
-                            update_promote, p)
-
-    def update_promote(p: Pool) -> Pool:
-        promoted = md.get_promoted(w0) == 1
-
-        def promote_first(q: Pool) -> Pool:
-            # full materialization (a write invalidates the shadow anyway)
-            cfg_full = cfg
-            q = _promote(q, cfg_full, ospn, block_idx)
-            return q
-
-        p = jax.lax.cond(promoted, lambda q: q, promote_first, p)
-        e = p.meta[ospn]
-        ww = e[0]
-        # materialize any still-cold blocks before dropping the chunks
-        nblocks = cfg.blocks_per_page if cfg.coloc else 1
-        pidx = md.get_ptr(e, md.PCHUNK_SLOT).astype(jnp.int32)
-        needs_fill = jnp.asarray(False)
-        for i in range(nblocks):
-            bt = md.get_block_type(ww, i)
-            needs_fill = needs_fill | ((bt != md.BT_PROM) & (bt != md.BT_ZERO))
-
-        def fill_cold(q: Pool) -> Pool:
-            rates = _rates_of(e, cfg)
-            buf = _gather_page_buf(q, cfg, e)
-            if cfg.store_payload:
-                full_vals = comp.decode_page(buf, rates, cfg)
-                pb = _page_to_bytes(full_vals)
-                safe = jnp.clip(pidx, 0, max(q.p_store.shape[0] - 1, 0))
-                old = q.p_store[safe]
-                pos = jnp.arange(cfg.page_bytes, dtype=jnp.int32) // cfg.block_bytes
-                keep_hot = jnp.zeros((cfg.page_bytes,), jnp.bool_)
-                for i in range(nblocks):
-                    hot_i = md.get_block_type(ww, i) == md.BT_PROM
-                    keep_hot = keep_hot | (hot_i & (pos == i))
-                q = q._replace(p_store=q.p_store.at[safe].set(
-                    jnp.where(keep_hot, old, pb)))
-            nb = comp.page_compressed_bytes(rates, cfg.vals_per_page // rates.shape[0]) // 64
-            c = _bump(q.counters, C_PROMO_RD, nb.astype(CTR_DTYPE))
-            c = _bump(c, C_PROMO_WR, cfg.page_bytes // 64)
-            return q._replace(counters=c)
-
-        p = jax.lax.cond(needs_fill, fill_cold, lambda q: q, p)
-        # drop the shadow (the update moment, §4.5)
-        had_chunks = md.get_num_chunks(ww) > 0
-        p = jax.lax.cond(had_chunks, lambda q: _free_chunks(q, cfg, e),
-                         lambda q: q, p)
-        ww2 = ww
-        for i in range(nblocks):
-            ww2 = md.set_block_type(ww2, i, md.BT_PROM)
-        ww2 = md.set_num_chunks(ww2, 0)
-        ww2 = md.set_shadow_valid(ww2, 0)
-        ww2 = md.set_dirty(ww2, 1)
-        new_entry = e.at[0].set(ww2)
-        for i in range(6):
-            new_entry = md.set_ptr(new_entry, i, 0)
-        p = p._replace(meta=p.meta.at[ospn].set(new_entry))
-        # the actual block write + activity touch (write = an access: hot)
-        p = _write_pchunk_block(p, cfg, pidx, block_idx, vals.astype(jnp.bfloat16))
-        c = _bump(p.counters, C_DATA_WR, cfg.block_bytes // 64)
-        c = _bump(c, C_META_WR, _meta_width(cfg, ospn))
-        return p._replace(counters=c)
-
-    return jax.lax.cond(valid, update, fresh, pool)
-
-
-def _overwrite_page(pool: Pool, cfg: PoolConfig, ospn, vals: jnp.ndarray) -> Pool:
-    """host_write_page body without the demote/mcache prologue (already ran)."""
-    was_promoted0 = md.get_promoted(pool.meta[ospn][0]) == 1
-    pool = jax.lax.cond(was_promoted0, lambda p: p,
-                        lambda p: _ensure_free_pchunk(p, cfg), pool)
-    entry = pool.meta[ospn]
-    pool = _free_chunks(pool, cfg, entry)
-    was_promoted = md.get_promoted(entry[0]) == 1
-    old_pidx = md.get_ptr(entry, md.PCHUNK_SLOT).astype(jnp.int32)
-    pfree, pidx_new = fl.pop(pool.pfree)
-    pidx = jnp.where(was_promoted, old_pidx, pidx_new)
-    pool = jax.tree_util.tree_map(
-        lambda a, b: jax.lax.select(was_promoted, a, b),
-        pool, pool._replace(pfree=pfree))
-    if cfg.store_payload:
-        safe = jnp.clip(pidx, 0, max(pool.p_store.shape[0] - 1, 0))
-        pool = pool._replace(p_store=pool.p_store.at[safe].set(_page_to_bytes(vals)))
-    nblocks = cfg.blocks_per_page if cfg.coloc else 1
-    w = jnp.uint32(0)
-    for i in range(nblocks):
-        w = md.set_block_type(w, i, md.BT_PROM)
-    w = md.set_valid(w, 1)
-    w = md.set_promoted(w, 1)
-    w = md.set_dirty(w, 1)
-    new_entry = md.empty_entry().at[0].set(w)
-    new_entry = md.set_ptr(new_entry, md.PCHUNK_SLOT, jnp.maximum(pidx, 0))
-    counters = _bump(pool.counters, C_DATA_WR, cfg.page_bytes // 64)
-    counters = _bump(counters, C_META_WR, _meta_width(cfg, ospn))
-    pool = pool._replace(meta=pool.meta.at[ospn].set(new_entry), counters=counters)
-    return pool._replace(activity=act.mark_allocated(pool.activity, pidx, ospn))
-
-
-# ---------------------------------------------------------------------------
-# Metrics.
-# ---------------------------------------------------------------------------
-
-def compression_ratio(pool: Pool, cfg: PoolConfig) -> jnp.ndarray:
-    """Effective ratio = logical bytes of valid pages / physical bytes used
-    (chunks + promoted duplicates, i.e. shadowing costs what the paper says)."""
-    valid = md.get_valid(pool.meta[:, 0]) == 1
-    logical = jnp.sum(valid) * cfg.page_bytes
-    n_single = n_single_chunks(cfg)
-    n_groups = (cfg.n_cchunks - n_single) // 8
-    used_chunks = (n_single - fl.free_count(pool.cfree)) + \
-        8 * (n_groups - fl.free_count(pool.gfree))
-    used_p = cfg.n_pchunks - fl.free_count(pool.pfree)
-    physical = used_chunks * cfg.chunk_bytes + used_p * cfg.page_bytes
-    return logical / jnp.maximum(physical, 1)
-
-
-def counters_dict(pool: Pool) -> dict:
-    vals = [int(v) for v in pool.counters]
-    return dict(zip(COUNTER_NAMES, vals))
-
-
-def total_traffic(pool: Pool) -> jnp.ndarray:
-    """Total internal 64B accesses (excludes host_reads/host_writes and
-    event counters)."""
-    idx = jnp.array([C_META_RD, C_META_WR, C_DATA_RD, C_DATA_WR, C_PROMO_RD,
-                     C_PROMO_WR, C_DEMO_RD, C_DEMO_WR, C_ACT_RD, C_ACT_WR])
-    return jnp.sum(pool.counters[idx])
+    return _ops.demote_if_needed(pool, cfg, DEFAULT_POLICY,
+                                 max_demotes=max_demotes)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.types import ModelConfig, ServeConfig
+from repro.core.engine.policy import SecondChanceLanes
 from repro.models import decode as D
 from repro.models import transformer as T
 
@@ -84,7 +85,9 @@ class Engine:
         self.requests: Dict[int, Request] = {}
         self.queue: List[int] = []
         self._next_rid = 0
-        self._sweep_hand = 0
+        # victim selection goes through the same §4.4 policy shape as the
+        # pool's clock engine, at lane granularity (engine/policy.py)
+        self._victim_policy = SecondChanceLanes(self.lanes)
         self.counters = {"promotions": 0, "demotions": 0, "preempt_bytes": 0,
                          "resume_bytes": 0, "steps": 0, "tokens": 0}
         self._step_fn, self._prefill_fn = _compiled_steps(cfg, scfg, max_len)
@@ -116,23 +119,16 @@ class Engine:
 
     def _second_chance_victim(self) -> Optional[int]:
         """Clock sweep over lanes: clear ref bits, pick first un-referenced."""
-        for _ in range(2 * self.lanes):
-            lane = self._sweep_hand
-            self._sweep_hand = (self._sweep_hand + 1) % self.lanes
-            rid = self.lane_req[lane]
-            if rid is None:
-                continue
-            req = self.requests[rid]
-            if req.ref_bit:
-                req.ref_bit = False
-            else:
-                return lane
-        # all referenced: round-robin fallback (the paper's random fallback)
-        for off in range(self.lanes):
-            lane = (self._sweep_hand + off) % self.lanes
-            if self.lane_req[lane] is not None:
-                return lane
-        return None
+        def _req(lane: int) -> Request:
+            return self.requests[self.lane_req[lane]]
+
+        def _clear(lane: int) -> None:
+            _req(lane).ref_bit = False
+
+        return self._victim_policy.select(
+            occupied=lambda lane: self.lane_req[lane] is not None,
+            referenced=lambda lane: _req(lane).ref_bit,
+            clear=_clear)
 
     def _admit(self) -> None:
         # fill free lanes first

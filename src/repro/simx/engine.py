@@ -1,85 +1,45 @@
-"""Trace-driven evaluation engine: runs a workload trace through the Layer-A
-pool (payload-less) under each compared scheme, reproducing the paper's
+"""Trace-driven evaluation engine: runs a workload trace through the pool
+engine (payload-less) under each compared scheme, reproducing the paper's
 SST-based methodology as traffic counts + the device.py time model.
 
-Schemes (paper §5/§6):
-  ibex        full IBEX (shadow + co-location + compaction, clock demotion)
-  ibex_base / ibex_s / ibex_sc / ibex_scm   Fig. 13 ablation ladder
-  tmcc        4KB blocks, variable-size chunks (zsmalloc bookkeeping +
-              fragmentation reclaim traffic), list-based recency, no shadow
-  dylect      tmcc + dual metadata tables (2nd probe per mcache miss)
-  mxt         4KB promotion cache with on-chip tags (no activity traffic,
-              clean evictions free) but page-granular promotion, no zero
-              elision
-  dmc         32KB migration granularity (promotion/demotion traffic x8)
-  compresso   line-level: no promotion machinery at all, low ratio
-  uncompressed   the normalization baseline
+Schemes are first-class ``Policy`` modules (repro.core.engine.policy): each
+scheme's extra traffic — TMCC's LRU-list updates and zsmalloc bookkeeping,
+DyLeCT's dual-table probes, MXT's on-chip tags, DMC's 8x migration — is
+charged by policy hooks at the access site where it physically occurs; there
+are no post-hoc counter adjustments. Traces replay through the batched
+front-end (repro.core.engine.batch): a window of W accesses per scan step
+with vectorized fast-path accounting, which is what makes the full workload
+sweep CPU-tractable (before/after accesses/sec are tracked in
+BENCH_simx.json).
 
-Post-pool adjustments (documented per scheme) add the traffic that the shared
-pool mechanics do not model natively (LRU-list updates, zspage bookkeeping,
-second-table probes, migration multipliers).
+Compresso (line-level, no promotion machinery) keeps its dedicated model.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.types import PoolConfig, replace
-from repro.core import pool as P
+from repro.core.engine import batch as B
+from repro.core.engine import state as S
+from repro.core.engine.policy import POLICIES, Policy
 from repro.simx import device as DEV
 from repro.simx.trace import WorkloadSpec, make_rates_table, make_trace
 
-
-@dataclass(frozen=True)
-class Scheme:
-    name: str
-    coloc: bool = True
-    shadow: bool = True
-    compact: bool = True
-    zero_elision: bool = True
-    lru_list_traffic: bool = False    # +1 access / host access (list recency)
-    dual_metadata: bool = False       # +1 metadata access / mcache miss
-    frag_bookkeeping: bool = False    # zsmalloc: +2 acc / compression store,
-    #                                   +1 reclaim acc / demotion
-    migrate_mult: float = 1.0         # DMC: 8x (32KB)
-    line_level: bool = False          # compresso fast path
-    no_activity_traffic: bool = False  # MXT on-chip tags
-    block4k_engine: bool = False      # 4x compression-engine latency
-
-
-SCHEMES: Dict[str, Scheme] = {
-    "ibex": Scheme("ibex"),
-    "ibex_base": Scheme("ibex_base", coloc=False, shadow=False, compact=False,
-                        block4k_engine=True),
-    "ibex_s": Scheme("ibex_s", coloc=False, shadow=True, compact=False,
-                     block4k_engine=True),
-    "ibex_sc": Scheme("ibex_sc", coloc=True, shadow=True, compact=False),
-    "ibex_scm": Scheme("ibex_scm", coloc=True, shadow=True, compact=True),
-    "tmcc": Scheme("tmcc", coloc=False, shadow=False, compact=True,
-                   lru_list_traffic=True, frag_bookkeeping=True,
-                   block4k_engine=True),
-    "dylect": Scheme("dylect", coloc=False, shadow=False, compact=True,
-                     lru_list_traffic=True, frag_bookkeeping=True,
-                     dual_metadata=True, block4k_engine=True),
-    "mxt": Scheme("mxt", coloc=False, shadow=True, compact=True,
-                  zero_elision=False, no_activity_traffic=True,
-                  block4k_engine=True),
-    "dmc": Scheme("dmc", coloc=False, shadow=False, compact=True,
-                  migrate_mult=8.0, block4k_engine=True),
-    "compresso": Scheme("compresso", line_level=True),
-}
+# name -> Policy; the per-scheme behavior lives in repro.core.engine.policy
+SCHEMES: Dict[str, Policy] = POLICIES
 
 TRAFFIC_KEYS = ("metadata_rd", "metadata_wr", "data_rd", "data_wr",
                 "promo_rd", "promo_wr", "demo_rd", "demo_wr",
                 "activity_rd", "activity_wr")
 
+DEFAULT_WINDOW = B.DEFAULT_WINDOW
 
-def pool_cfg_for(scheme: Scheme, *, n_pages: int, n_pchunks: int,
+
+def pool_cfg_for(policy: Policy, *, n_pages: int, n_pchunks: int,
                  n_cchunks: int) -> PoolConfig:
     return PoolConfig(
         # mcache MUST be much smaller than the page population (paper:
@@ -88,89 +48,66 @@ def pool_cfg_for(scheme: Scheme, *, n_pages: int, n_pchunks: int,
         # fallback, inverting the mechanism being measured
         n_pages=n_pages, n_cchunks=n_cchunks, n_pchunks=n_pchunks,
         mcache_sets=4, mcache_ways=8, demote_watermark=8,
-        shadow=scheme.shadow, coloc=scheme.coloc, compact=scheme.compact,
-        zero_elision=scheme.zero_elision, store_payload=False)
+        shadow=policy.shadow, coloc=policy.coloc, compact=policy.compact,
+        zero_elision=policy.zero_elision, store_payload=False)
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _run_scan(pool: P.Pool, cfg: PoolConfig, ospns, writes, blocks):
-    zero_block = jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
-
-    def step(pool, x):
-        ospn, w, blk = x
-
-        def do_write(p):
-            return P.host_write_block.__wrapped__(p, cfg, ospn, blk, zero_block)
-
-        def do_read(p):
-            return P.host_read_block.__wrapped__(p, cfg, ospn, blk)[0]
-
-        return jax.lax.cond(w, do_write, do_read, pool), None
-
-    pool, _ = jax.lax.scan(step, pool, (ospns, writes, blocks))
-    return pool
+def first_touch_populate(pool, cfg: PoolConfig, policy: Policy, *,
+                         n_used: int, seed: int = 0,
+                         window: int = DEFAULT_WINDOW):
+    """Write every used page once (first touch -> promoted; demotes), then
+    zero the counters. Padded to ``cfg.n_pages`` accesses (cycling) so the
+    replay length is static per scheme. Shared by run_workload, the replay
+    benchmark, and the parity tests so all warm pools identically."""
+    order = np.random.default_rng(seed).permutation(n_used).astype(np.int32)
+    order = order[np.arange(cfg.n_pages) % n_used]
+    pool = B.replay_trace(pool, cfg, policy, order,
+                          np.ones((cfg.n_pages,), bool),
+                          np.zeros((cfg.n_pages,), np.int32), window=window)
+    return pool._replace(counters=jnp.zeros_like(pool.counters))
 
 
 def run_workload(scheme_name: str, spec: WorkloadSpec, *,
                  n_accesses: int = 20000, promoted_pages: int = 128,
                  seed: int = 0, first_touch: bool = True,
-                 device: Optional[DEV.DeviceConfig] = None
-                 ) -> Dict[str, float]:
+                 device: Optional[DEV.DeviceConfig] = None,
+                 window: int = DEFAULT_WINDOW) -> Dict[str, float]:
     """Run one (scheme x workload) cell; returns traffic + time metrics.
 
     Pool dimensions are FIXED (4x promoted region) across workloads so the
-    jitted scan compiles once per scheme; a workload's footprint is realized
-    by restricting which pages its trace touches."""
-    scheme = SCHEMES[scheme_name]
+    jitted replay compiles once per scheme; a workload's footprint is
+    realized by restricting which pages its trace touches. ``window=1``
+    forces the serial one-access-per-step scan (benchmark baseline)."""
+    policy = SCHEMES[scheme_name]
     n_pages = 4 * promoted_pages
     n_used = min(max(int(promoted_pages * spec.footprint_pages), 32), n_pages)
     rates = make_rates_table(spec, n_pages, seed=seed)
     ospn, is_write, block = make_trace(spec, n_accesses=n_accesses,
                                        n_pages=n_used, seed=seed)
     dev = device or DEV.DeviceConfig()
-    if scheme.block4k_engine:
+    if policy.block4k_engine:
         dev = replace(dev, block_scale=4.0)
 
-    if scheme.line_level:
+    if policy.line_level:
         return _run_compresso(spec, rates[:n_used], ospn, is_write, dev)
 
-    cfg = pool_cfg_for(scheme, n_pages=n_pages, n_pchunks=promoted_pages,
+    cfg = pool_cfg_for(policy, n_pages=n_pages, n_pchunks=promoted_pages,
                        n_cchunks=2 * n_pages * 8)
-    pool = P.make_pool(cfg, seed=seed, rates_table=jnp.asarray(rates))
+    pool = S.make_pool(cfg, seed=seed, rates_table=jnp.asarray(rates))
     if first_touch:
-        # populate every used page once (first touch -> promoted; demotes).
-        # padded to n_pages (cycling) so the scan length is static per scheme.
-        order = np.random.default_rng(seed).permutation(n_used).astype(np.int32)
-        order = order[np.arange(n_pages) % n_used]
-        pool = _run_scan(pool, cfg, jnp.asarray(order),
-                         jnp.ones((n_pages,), bool),
-                         jnp.zeros((n_pages,), jnp.int32))
-        pool = pool._replace(counters=jnp.zeros_like(pool.counters))
-    pool = _run_scan(pool, cfg, jnp.asarray(ospn), jnp.asarray(is_write),
-                     jnp.asarray(block))
-    c = P.counters_dict(pool)
-    return _finalize(scheme, c, dev,
-                     ratio=float(P.compression_ratio(pool, cfg)))
+        pool = first_touch_populate(pool, cfg, policy, n_used=n_used,
+                                    seed=seed, window=window)
+    pool = B.replay_trace(pool, cfg, policy, ospn, is_write, block,
+                          window=window)
+    c = S.counters_dict(pool)
+    return _finalize(c, dev, ratio=float(S.compression_ratio(pool, cfg)))
 
 
-def _finalize(scheme: Scheme, c: Dict[str, int], dev: DEV.DeviceConfig,
-              ratio: float) -> Dict[str, float]:
+def _finalize(c: Dict[str, int], dev: DEV.DeviceConfig, ratio: float
+              ) -> Dict[str, float]:
+    """Assemble the metrics dict. All scheme-specific traffic was already
+    counted in place by policy hooks — nothing is adjusted here."""
     t = {k: float(c[k]) for k in TRAFFIC_KEYS}
-    host = c["host_reads"] + c["host_writes"]
-    # scheme post-adjustments
-    if scheme.no_activity_traffic:
-        t["activity_rd"] = t["activity_wr"] = 0.0
-    if scheme.lru_list_traffic:
-        t["activity_wr"] += host  # list node update per access
-    if scheme.dual_metadata:
-        t["metadata_rd"] += c["mcache_misses"]
-    if scheme.frag_bookkeeping:
-        stores = c["demotions_dirty"] + c["recompress_retry"]
-        t["metadata_wr"] += 2 * stores
-        t["demo_wr"] += c["demotions_clean"] + c["demotions_dirty"]
-    if scheme.migrate_mult != 1.0:
-        for k in ("promo_rd", "promo_wr", "demo_rd", "demo_wr"):
-            t[k] *= scheme.migrate_mult
     internal = sum(t.values())
     traffic = dict(t, internal_accesses=internal,
                    host_reads=c["host_reads"], host_writes=c["host_writes"],
@@ -182,6 +119,7 @@ def _finalize(scheme: Scheme, c: Dict[str, int], dev: DEV.DeviceConfig,
                    random_fallback=c["random_fallback"],
                    mcache_hits=c["mcache_hits"],
                    mcache_misses=c["mcache_misses"])
+    host = c["host_reads"] + c["host_writes"]
     time_s = DEV.exec_time(traffic, dev)
     base_s = DEV.uncompressed_time(host, dev)
     return dict(traffic, time_s=time_s, uncompressed_s=base_s,
@@ -196,10 +134,7 @@ def _run_compresso(spec: WorkloadSpec, rates: np.ndarray, ospn: np.ndarray,
     per write (read-modify-write + occasional size-overflow repack)."""
     from repro.core import mcache as MC
     mc = MC.make_mcache(32, 16)
-    hits = 0
 
-    # vectorized-ish mcache sim via python loop over unique ospns windows is
-    # too slow; use a jitted scan over accesses
     @jax.jit
     def run(mc, pages):
         def step(carry, p):

@@ -23,7 +23,14 @@ def _batch(cfg):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# tier-1 keeps three cheap, family-diverse configs (dense/GQA, MLA, audio
+# frontend); the rest are slow-marked and run with `pytest -m ""`
+_FAST_ARCHS = {"llama3_8b", "minicpm3_4b", "musicgen_medium"}
+_ARCH_PARAMS = [a if a in _FAST_ARCHS else
+                pytest.param(a, marks=pytest.mark.slow) for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_forward_and_grad(arch):
     cfg = get_reduced(arch)
     params, axes = T.init_params(KEY, cfg)
@@ -42,7 +49,7 @@ def test_forward_and_grad(arch):
     assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_decode_step(arch):
     cfg = get_reduced(arch)
     scfg = ServeConfig(hot_window=16, attn_chunk=32, kv_rate_bits=8)

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dev dependency; see requirements-dev.txt
+    HAVE_HYPOTHESIS = False
 
 from repro.common.types import PoolConfig, replace
 from repro.core import pool as P
@@ -73,6 +78,7 @@ def test_zero_page_elision():
     check_pool_invariants(pool, CFG)
 
 
+@pytest.mark.slow
 def test_read_your_writes(warm_pool):
     pool = warm_pool
     for i in range(6):
@@ -105,6 +111,7 @@ def test_compression_ratio_sane(warm_pool):
     assert 0.9 < r < 4.0
 
 
+@pytest.mark.slow
 def test_shadow_disabled_all_dirty():
     cfg = replace(CFG, shadow=False)
     pool = P.make_pool(cfg)
@@ -119,15 +126,7 @@ def test_shadow_disabled_all_dirty():
     check_pool_invariants(pool, cfg)
 
 
-OPS = st.lists(
-    st.tuples(st.sampled_from(["wp", "rb", "wb"]), st.integers(0, 23),
-              st.integers(0, 3), st.integers(0, 2 ** 16)),
-    min_size=5, max_size=40)
-
-
-@settings(max_examples=12, deadline=None)
-@given(ops=OPS)
-def test_property_invariants_random_ops(ops):
+def _random_ops_invariants(ops):
     """I1-I5 hold under arbitrary interleavings of page writes, block reads
     and block writes."""
     cfg = PoolConfig(n_pages=24, n_cchunks=256, n_pchunks=16, mcache_sets=2,
@@ -160,3 +159,21 @@ def test_property_invariants_random_ops(ops):
             shadow[ospn][blk * cfg.vals_per_block:(blk + 1) * cfg.vals_per_block] = \
                 np.asarray(bvals, np.float32)
     check_pool_invariants(pool, cfg)
+
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.tuples(st.sampled_from(["wp", "rb", "wb"]), st.integers(0, 23),
+                  st.integers(0, 3), st.integers(0, 2 ** 16)),
+        min_size=5, max_size=40)
+
+    @pytest.mark.slow
+    @settings(max_examples=12, deadline=None)
+    @given(ops=OPS)
+    def test_property_invariants_random_ops(ops):
+        _random_ops_invariants(ops)
+else:
+    @pytest.mark.slow
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_invariants_random_ops():
+        pass

@@ -1,0 +1,132 @@
+"""Pool state-machine invariants I1-I5 (engine/state.py docstring, DESIGN.md
+§9), enforced without optional dependencies:
+
+  I1  every C-chunk is free XOR referenced by exactly one page
+  I2  promoted(page) <=> P-chunk allocated <=> activity entry allocated
+  I3  dirty <=> num_chunks == 0 for promoted pages (no compressed copy)
+  I4  clean promoted pages have shadow_valid=1 and intact chunks (§4.5)
+  I5  read-your-writes at block granularity
+
+Random-but-deterministic op interleavings drive the serial front-end; the
+batched front-end replays traces through the same machinery payload-less.
+The structural clauses (I1-I4 + conservation) live in
+helpers.check_pool_invariants; I5 is asserted against a numpy oracle here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.types import PoolConfig
+from repro.core.engine import batch as B
+from repro.core.engine import ops, state as S
+from repro.core.engine.policy import DEFAULT_POLICY, POLICIES
+from helpers import check_pool_invariants
+
+CFG = PoolConfig(n_pages=24, n_cchunks=256, n_pchunks=16, mcache_sets=2,
+                 mcache_ways=2, demote_watermark=2, store_payload=True)
+
+write_page = jax.jit(ops._host_write_page, static_argnums=(1, 2))
+read_block = jax.jit(ops._host_read_block, static_argnums=(1, 2))
+write_block = jax.jit(ops._host_write_block, static_argnums=(1, 2))
+
+
+def _run_ops(seed: int, n_ops: int):
+    """Apply a deterministic random interleaving of page writes / block reads
+    / block writes; returns (pool, oracle dict ospn -> np page)."""
+    rng = np.random.default_rng(seed)
+    pool = S.make_pool(CFG)
+    oracle = {}
+    for _ in range(n_ops):
+        kind = rng.choice(["wp", "rb", "wb"])
+        ospn = int(rng.integers(0, CFG.n_pages))
+        blk = int(rng.integers(0, CFG.blocks_per_page))
+        key = jax.random.PRNGKey(int(rng.integers(0, 2 ** 16)))
+        if kind == "wp":
+            vals = (jax.random.normal(key, (CFG.vals_per_page,)) * 0.1
+                    ).astype(jnp.bfloat16)
+            pool = write_page(pool, CFG, DEFAULT_POLICY, jnp.asarray(ospn),
+                              vals)
+            oracle[ospn] = np.asarray(vals, np.float32)
+        elif kind == "rb":
+            pool, vals = read_block(pool, CFG, DEFAULT_POLICY,
+                                    jnp.asarray(ospn), jnp.asarray(blk))
+            if ospn in oracle:
+                ref = oracle[ospn][blk * CFG.vals_per_block:
+                                   (blk + 1) * CFG.vals_per_block]
+                got = np.asarray(vals, np.float32)
+                # I5 (read side): quantization re-cycles may compound a bit
+                tol = 2.5 * CFG.tol4 * max(np.abs(ref).max(), 1e-6) + 1e-6
+                assert np.abs(got - ref).max() <= tol
+            else:
+                assert np.all(np.asarray(vals) == 0)
+        else:
+            bvals = (jax.random.normal(key, (CFG.vals_per_block,)) * 0.2
+                     ).astype(jnp.bfloat16)
+            pool = write_block(pool, CFG, DEFAULT_POLICY, jnp.asarray(ospn),
+                               jnp.asarray(blk), bvals)
+            if ospn not in oracle:
+                oracle[ospn] = np.zeros((CFG.vals_per_page,), np.float32)
+            oracle[ospn][blk * CFG.vals_per_block:
+                         (blk + 1) * CFG.vals_per_block] = \
+                np.asarray(bvals, np.float32)
+    return pool, oracle
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_invariants_random_interleavings(seed):
+    """I1-I4 + freelist/ownership conservation after arbitrary op mixes."""
+    pool, _ = _run_ops(seed, n_ops=30)
+    check_pool_invariants(pool, CFG)
+
+
+def test_read_your_writes_exact():
+    """I5: a freshly written block reads back bit-exactly (it is resident in
+    the promoted region; no quantization cycle in between)."""
+    pool = S.make_pool(CFG)
+    blk = (jax.random.normal(jax.random.PRNGKey(7), (CFG.vals_per_block,))
+           * 0.3).astype(jnp.bfloat16)
+    pool = write_block(pool, CFG, DEFAULT_POLICY, jnp.asarray(3),
+                       jnp.asarray(1), blk)
+    pool, got = read_block(pool, CFG, DEFAULT_POLICY, jnp.asarray(3),
+                           jnp.asarray(1))
+    assert jnp.all(got == blk)
+    check_pool_invariants(pool, CFG)
+
+
+def test_dirty_xor_shadow():
+    """I3/I4 word-level check: after a write the page is dirty with no
+    chunks; after demote+promote of an unmodified page it is clean with
+    shadow_valid=1 and chunks intact."""
+    pool, _ = _run_ops(3, n_ops=25)
+    meta = np.asarray(pool.meta)
+    for ospn in range(CFG.n_pages):
+        w0 = int(meta[ospn, 0])
+        if not (w0 >> 31) & 1 or not (w0 >> 30) & 1:
+            continue
+        dirty = (w0 >> 29) & 1
+        shadow = (w0 >> 28) & 1
+        nchunks = (w0 >> 20) & 0xF
+        if dirty:
+            assert nchunks == 0 and shadow == 0, hex(w0)   # I3
+        else:
+            assert shadow == 1 and nchunks > 0, hex(w0)    # I4
+
+
+def test_batched_replay_preserves_invariants():
+    """The batched front-end drives the same mechanisms: I1-I4 hold after a
+    windowed payload-less replay under the full policy set's default."""
+    cfg = PoolConfig(n_pages=64, n_cchunks=1024, n_pchunks=16, mcache_sets=2,
+                     mcache_ways=4, demote_watermark=2, store_payload=False)
+    rng = np.random.default_rng(0)
+    rates = rng.integers(0, 4, size=(64, 4)).astype(np.int32)
+    pool = S.make_pool(cfg, rates_table=jnp.asarray(rates))
+    n = 256
+    ospns = rng.integers(0, 48, size=n).astype(np.int32)
+    writes = rng.random(n) < 0.3
+    blocks = rng.integers(0, 4, size=n).astype(np.int32)
+    pool = B.replay_trace(pool, cfg, POLICIES["ibex"], ospns, writes, blocks,
+                          window=16)
+    check_pool_invariants(pool, cfg)
+    c = S.counters_dict(pool)
+    assert c["host_reads"] + c["host_writes"] == n

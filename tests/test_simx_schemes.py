@@ -1,0 +1,132 @@
+"""Policy-layer tests: scheme hooks charge traffic in place (no post-hoc
+adjustments), the batched front-end agrees with the serial engine within
+noise, and scheme-relative ordering survives. Cheap versions of the
+test_system cells plus eager (un-jitted) unit checks of the Policy hooks."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.engine import batch as B
+from repro.core.engine import state as S
+from repro.core.engine.policy import (POLICIES, DmcPolicy, DylectPolicy,
+                                      IbexPolicy, MxtPolicy,
+                                      SecondChanceLanes, TmccPolicy)
+from repro.simx.engine import (SCHEMES, first_touch_populate, pool_cfg_for,
+                               run_workload)
+from repro.simx.trace import WORKLOADS, make_rates_table, make_trace
+
+TRAFFIC = ("metadata_rd", "metadata_wr", "data_rd", "data_wr", "promo_rd",
+           "promo_wr", "demo_rd", "demo_wr", "activity_rd", "activity_wr")
+
+
+def _zeros():
+    return jnp.zeros((S.NUM_COUNTERS,), S.CTR_DTYPE)
+
+
+def test_policy_registry_covers_paper_schemes():
+    for name in ("ibex", "ibex_base", "ibex_s", "ibex_sc", "ibex_scm",
+                 "tmcc", "dylect", "mxt", "dmc", "compresso"):
+        assert name in POLICIES
+        assert POLICIES[name].name == name
+    assert SCHEMES is POLICIES
+
+
+def test_tmcc_hooks_charge_in_place():
+    """TMCC: +1 recency-list access per host op, +2 bookkeeping writes per
+    compression store, +1 reclaim access per demotion — at the hook sites."""
+    p = TmccPolicy()
+    c = p.on_host_access(_zeros(), False)
+    assert int(c[S.C_ACT_WR]) == 1
+    c = p.on_compress_store(_zeros())
+    assert int(c[S.C_META_WR]) == 2
+    c = p.on_demotion(_zeros(), clean=True)
+    assert int(c[S.C_DEMO_WR]) == 1
+    # the base policy charges none of these
+    base = IbexPolicy()
+    assert int(jnp.sum(base.on_host_access(_zeros(), False))) == 0
+    assert int(jnp.sum(base.on_compress_store(_zeros()))) == 0
+
+
+def test_dylect_second_table_probe():
+    c = DylectPolicy().on_mcache_miss(_zeros(), n=5)
+    assert int(c[S.C_META_RD]) == 5
+    assert int(jnp.sum(TmccPolicy().on_mcache_miss(_zeros(), n=5))) == 0
+
+
+def test_dmc_migration_multiplier():
+    c = DmcPolicy().charge_migration(_zeros(), S.C_PROMO_RD, 3)
+    assert int(c[S.C_PROMO_RD]) == 24          # 8x (32KB granularity)
+    c = IbexPolicy().charge_migration(_zeros(), S.C_PROMO_RD, 3)
+    assert int(c[S.C_PROMO_RD]) == 3
+
+
+def test_mxt_on_chip_tags_suppress_activity_traffic():
+    c = MxtPolicy().charge_activity(_zeros(), S.C_ACT_RD, 7)
+    assert int(jnp.sum(c)) == 0
+    c = IbexPolicy().charge_activity(_zeros(), S.C_ACT_RD, 7)
+    assert int(c[S.C_ACT_RD]) == 7
+
+
+def test_second_chance_lanes_policy():
+    """Referenced lanes get a second chance; the first un-referenced occupied
+    lane after the hand is the victim; all-referenced falls back."""
+    sel = SecondChanceLanes(4)
+    occupied = [True, False, True, True]
+    ref = {0: True, 2: False, 3: True}
+    victim = sel.select(lambda l: occupied[l], lambda l: ref[l],
+                        lambda l: ref.__setitem__(l, False))
+    assert victim == 2
+    assert ref[0] is False                     # lane 0 got its chance cleared
+    ref = {0: True, 2: True, 3: True}
+    sel2 = SecondChanceLanes(4)
+    v2 = sel2.select(lambda l: occupied[l], lambda l: True, lambda l: None)
+    assert v2 in (0, 2, 3)                     # round-robin fallback
+
+
+@pytest.fixture(scope="module")
+def small_replay():
+    # NOTE: the promoted region must be well above the demotion watermark —
+    # when the watermark is a sizable fraction of the pool, the serial
+    # engine's per-access demotion cadence thrashes in a way the batched
+    # per-window cadence (faithfully) avoids, and traffic diverges.
+    policy = POLICIES["ibex"]
+    prom = 48
+    n_pages = 4 * prom
+    cfg = pool_cfg_for(policy, n_pages=n_pages, n_pchunks=prom,
+                       n_cchunks=2 * n_pages * 8)
+    spec = WORKLOADS["mcf"]
+    rates = make_rates_table(spec, n_pages, seed=0)
+    n_used = min(max(int(prom * spec.footprint_pages), 32), n_pages)
+    ospn, wr, blk = make_trace(spec, n_accesses=1024, n_pages=n_used, seed=0)
+    pool = S.make_pool(cfg, rates_table=jnp.asarray(rates))
+    pool = first_touch_populate(pool, cfg, policy, n_used=n_used)
+    return policy, cfg, pool, (ospn, wr, blk)
+
+
+def test_batched_matches_serial_within_noise(small_replay):
+    """The window front-end's traffic totals track the one-access-per-step
+    engine; only background-demotion *timing* differs."""
+    policy, cfg, pool, (ospn, wr, blk) = small_replay
+    ps = B._replay_serial(pool, cfg, policy, jnp.asarray(ospn),
+                          jnp.asarray(wr), jnp.asarray(blk))
+    pb = B.replay_trace(pool, cfg, policy, ospn, wr, blk, window=16)
+    cs, cb = S.counters_dict(ps), S.counters_dict(pb)
+    assert cb["host_reads"] == cs["host_reads"]
+    assert cb["host_writes"] == cs["host_writes"]
+    ts = sum(cs[k] for k in TRAFFIC)
+    tb = sum(cb[k] for k in TRAFFIC)
+    assert abs(tb - ts) / max(ts, 1) < 0.15, (ts, tb)
+    assert cb["promotions"] > 0
+
+
+def test_scheme_relative_traffic_ordering():
+    """Fig. 9/11 headline at test scale: IBEX moves less internal traffic
+    than TMCC and ends up faster. Deliberately NOT slow-marked — this is the
+    tier-1 guard for the acceptance criterion that scheme-relative results
+    survive the engine refactor (the full-size cells live in
+    test_system.py). DyLeCT/MXT/DMC deltas are guarded by the cheap hook
+    unit tests above."""
+    kw = dict(n_accesses=1024, promoted_pages=32)
+    ibex = run_workload("ibex", WORKLOADS["pr"], **kw)
+    tmcc = run_workload("tmcc", WORKLOADS["pr"], **kw)
+    assert ibex["internal_accesses"] < tmcc["internal_accesses"]
+    assert ibex["time_s"] < tmcc["time_s"]

@@ -3,9 +3,13 @@ headline claims exercised through the full stack (fast versions of the
 benchmark cells)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.simx.engine import SCHEMES, run_workload
 from repro.simx.trace import WORKLOADS
+
+# full-size cells are slow; tier-1 scheme checks live in test_simx_schemes.py
+pytestmark = pytest.mark.slow
 
 
 def test_ibex_beats_tmcc_on_migration_heavy_workload():

@@ -27,6 +27,7 @@ def _batch(step=0, b=4, s=32):
 
 # -- optimizer ----------------------------------------------------------------
 
+@pytest.mark.slow
 def test_adamw_decreases_loss():
     params, _ = T.init_params(KEY, CFG)
     ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1)
@@ -41,6 +42,7 @@ def test_adamw_decreases_loss():
     assert np.isfinite(losses).all()
 
 
+@pytest.mark.slow
 def test_compressed_state_tracks_dense():
     params, _ = T.init_params(KEY, CFG)
     batch = _batch()
