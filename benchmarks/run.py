@@ -21,7 +21,8 @@ def main() -> None:
     quick = not args.full
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
-    from benchmarks import kernel_bench, paper_figs, simx_bench, system_bench
+    from benchmarks import (kernel_bench, paper_figs, serve_bench, simx_bench,
+                            system_bench)
 
     suites = [(f.__name__, lambda q, f=f: f(q)) for f in paper_figs.ALL_FIGS]
     suites.append(("kernel", kernel_bench.run))
@@ -29,6 +30,8 @@ def main() -> None:
     # trace-replay throughput; also writes BENCH_simx.json (accesses/sec per
     # scheme, serial-vs-batched) so the perf trajectory is machine-readable
     suites.append(("simx", simx_bench.run))
+    # serving engine: per-lane baseline vs batched scheduler -> BENCH_serve.json
+    suites.append(("serve", serve_bench.run))
 
     print("name,us_per_call,derived")
     failed = 0

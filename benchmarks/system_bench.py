@@ -60,16 +60,17 @@ def run(quick: bool) -> List[Dict]:
                             f"saving=x{2 * raw / (raw + comp_b):.2f}"})
 
     # pool op latency (Layer A with payload)
-    from repro.core import pool as P
+    from repro.core import engine as P
+    POL = P.DEFAULT_POLICY
     pcfg = PoolConfig(n_pages=64, n_cchunks=512, n_pchunks=32, mcache_sets=4,
                       mcache_ways=4, demote_watermark=4, store_payload=True)
     pool = P.make_pool(pcfg)
     page = (jax.random.normal(KEY, (pcfg.vals_per_page,)) * 0.1).astype(jnp.bfloat16)
-    pool = P.host_write_page(pool, pcfg, jnp.asarray(0), page)  # compile
+    pool = P.host_write_page(pool, pcfg, POL, jnp.asarray(0), page)  # compile
     t0 = time.perf_counter()
     n = 16 if quick else 64
     for i in range(n):
-        pool = P.host_write_page(pool, pcfg, jnp.asarray(i % 48), page)
+        pool = P.host_write_page(pool, pcfg, POL, jnp.asarray(i % 48), page)
     jax.block_until_ready(pool.counters)
     rows.append({"name": "pool.host_write_page",
                  "us": (time.perf_counter() - t0) * 1e6 / n,

@@ -1,3 +1,3 @@
 """IBEX core: promotion-based block-level compression management (Layer A)."""
-from repro.core import (activity, bitpack, compressor, freelist, mcache,
-                        metadata, pool)  # noqa: F401
+from repro.core import (activity, bitpack, compressor, engine, freelist,
+                        mcache, metadata)  # noqa: F401

@@ -13,8 +13,6 @@
   * ``batch``  — the batched access front-end: a window of W accesses per
                  scan step, vectorized classification + conflict
                  serialization only for same-page hits.
-
-``repro.core.pool`` remains as a thin compatibility shim for one PR.
 """
 from repro.core.engine import batch, ops, policy, state
 from repro.core.engine.ops import (demote_if_needed, demote_one,

@@ -110,9 +110,13 @@ def _mcache_window(pool: Pool, cfg: PoolConfig, policy: Policy, ospns) -> Pool:
                          pool.activity.shape[0] - 1)
     already = md.act_referenced(pool.activity[safe_pidx]) == 1
     ref_bit = jnp.uint32(1) << jnp.uint32(md.ACT_REFERENCED_BIT)
-    delta = jnp.where(prom & (~already), ref_bit, jnp.uint32(0))
+    flips = prom & (~already)
+    delta = jnp.where(flips, ref_bit, jnp.uint32(0))
     activity = pool.activity.at[safe_pidx].add(delta)
-    counters = policy.charge_activity(counters, C_ACT_WR, jnp.sum(prom))
+    # charge exactly the activity words written: evictions whose referenced
+    # bit actually flips (an already-referenced entry needs no write) —
+    # matches the serial path's charge in ops.mcache_step
+    counters = policy.charge_activity(counters, C_ACT_WR, jnp.sum(flips))
     return pool._replace(cache=cache, activity=activity, counters=counters)
 
 
@@ -222,23 +226,38 @@ def _replay_windows(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
 
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def _replay_serial(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
-                   writes, blocks) -> Pool:
+                   writes, blocks, valid=None) -> Pool:
     """The seed's one-access-per-step scan (kept as the batched path's
-    reference and for BENCH_simx.json before/after measurements)."""
+    reference and for BENCH_simx.json before/after measurements).
+
+    ``valid=None`` processes every access and traces the seed's plain
+    two-way cond — the reference/baseline path must not pay for masking. A
+    bool mask adds an outer cond that makes masked-out accesses exact no-ops
+    (pool and counters untouched) — the batched path pads its trace tail
+    with them so every tail compiles at one shape."""
     zero_block = jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
 
-    def step(p, x):
-        ospn, w, blk = x
-
+    def access(p, ospn, w, blk):
         def do_write(q):
             return ops._host_write_block(q, cfg, policy, ospn, blk, zero_block)
 
         def do_read(q):
             return ops._host_read_block(q, cfg, policy, ospn, blk)[0]
 
-        return jax.lax.cond(w, do_write, do_read, p), None
+        return jax.lax.cond(w, do_write, do_read, p)
 
-    pool, _ = jax.lax.scan(step, pool, (ospns, writes, blocks))
+    if valid is None:
+        def step(p, x):
+            return access(p, *x), None
+        pool, _ = jax.lax.scan(step, pool, (ospns, writes, blocks))
+        return pool
+
+    def step(p, x):
+        ospn, w, blk, v = x
+        return jax.lax.cond(v, lambda q: access(q, ospn, w, blk),
+                            lambda q: q, p), None
+
+    pool, _ = jax.lax.scan(step, pool, (ospns, writes, blocks, valid))
     return pool
 
 
@@ -246,23 +265,32 @@ def replay_trace(pool: Pool, cfg: PoolConfig, policy: Policy, ospns, writes,
                  blocks, *, window: int = DEFAULT_WINDOW) -> Pool:
     """Replay a (ospn, is_write, block) trace through the pool.
 
-    ``window > 1`` uses the batched front-end; ``window <= 1`` (or a trace
-    shorter than one window) falls back to the serial scan. The trace tail
-    that does not fill a window replays serially. Write accesses carry a
-    zero-block payload (trace replay measures traffic, not data)."""
+    ``window > 1`` uses the batched front-end; ``window <= 1`` runs the
+    serial scan over the whole trace. The trace tail that does not fill a
+    window (and any trace shorter than one window) replays serially, padded
+    to exactly ``window`` accesses with masked no-ops — so the batched path
+    compiles a fixed set of shapes (the window scan plus one window-sized
+    serial tail) no matter the trace length, instead of one ``_replay_serial``
+    per distinct tail length. Write accesses carry a zero-block payload
+    (trace replay measures traffic, not data)."""
     ospns = jnp.asarray(ospns, jnp.int32)
     writes = jnp.asarray(writes, bool)
     blocks = jnp.asarray(blocks, jnp.int32)
     n = int(ospns.shape[0])
-    n_win = n // window if window > 1 else 0
-    if n_win == 0:
+    if window <= 1:
         return _replay_serial(pool, cfg, policy, ospns, writes, blocks)
+    n_win = n // window
     head = n_win * window
-    pool = _replay_windows(pool, cfg, policy,
-                           ospns[:head].reshape(n_win, window),
-                           writes[:head].reshape(n_win, window),
-                           blocks[:head].reshape(n_win, window))
-    if head < n:
-        pool = _replay_serial(pool, cfg, policy, ospns[head:], writes[head:],
-                              blocks[head:])
+    if n_win:
+        pool = _replay_windows(pool, cfg, policy,
+                               ospns[:head].reshape(n_win, window),
+                               writes[:head].reshape(n_win, window),
+                               blocks[:head].reshape(n_win, window))
+    tail = n - head
+    if tail:
+        pad = window - tail
+        pz = lambda a: jnp.pad(a[head:], ((0, pad),))
+        valid = jnp.arange(window) < tail
+        pool = _replay_serial(pool, cfg, policy, pz(ospns), pz(writes),
+                              pz(blocks), valid)
     return pool

@@ -83,9 +83,15 @@ def mcache_step(pool: Pool, cfg: PoolConfig, policy: Policy, ospn
     ev_promoted = (md.get_promoted(ev_entry[0]) == 1) & (evicted >= 0) & \
         (md.get_valid(ev_entry[0]) == 1)
     ev_pidx = md.get_ptr(ev_entry, md.PCHUNK_SLOT).astype(jnp.int32)
+    safe_pidx = jnp.clip(ev_pidx, 0, pool.activity.shape[0] - 1)
+    already = md.act_referenced(pool.activity[safe_pidx]) == 1
     new_act = act.lazy_touch(pool.activity, jnp.where(ev_promoted, ev_pidx, -1))
+    # the activity word is written only when the referenced bit flips; an
+    # already-referenced entry costs nothing (same charge as the batched
+    # front-end's masked scatter in engine/batch.py)
     counters = jax.lax.select(
-        ev_promoted, policy.charge_activity(counters, C_ACT_WR), counters)
+        ev_promoted & (~already),
+        policy.charge_activity(counters, C_ACT_WR), counters)
     return pool._replace(cache=cache, activity=new_act, counters=counters), hit
 
 

@@ -36,6 +36,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import activity as act
 from repro.core.engine.state import (C_ACT_WR, C_DEMO_WR, C_META_RD,
@@ -200,29 +201,49 @@ POLICIES: Dict[str, Policy] = {
 class SecondChanceLanes:
     """The §4.4 second-chance victim-selection policy at *lane* (request)
     granularity, used by the serving engine: reference bit = "generated a
-    token since last sweep". Mirrors ``Policy.select_victim`` over Python
-    lane state instead of the activity region, including the bounded sweep +
-    round-robin fallback (the paper's random fallback)."""
+    token since last sweep". Mirrors ``Policy.select_victim`` over lane
+    state instead of the activity region, including the bounded sweep +
+    round-robin fallback (the paper's random fallback).
+
+    ``select_mask`` is the vectorized form: one pass of array ops over all
+    lanes (the serving engine keeps lane bookkeeping as arrays, so the sweep
+    must not loop lane-by-lane). ``select`` keeps the callback form for
+    callers holding per-lane Python state."""
 
     def __init__(self, n_lanes: int):
         self.n = n_lanes
         self.hand = 0
 
+    def select_mask(self, occupied, referenced):
+        """One-pass sweep. occupied/referenced: bool[n] arrays. Returns
+        (victim lane or None, new referenced bits). Semantics match the
+        serial clock: ref bits of occupied lanes between the hand and the
+        victim are cleared (their second chance); if every occupied lane is
+        referenced, all are cleared and the first occupied lane after the
+        hand is taken (round-robin fallback)."""
+        occ = np.asarray(occupied, bool)
+        ref = np.array(referenced, bool, copy=True)
+        order = (self.hand + np.arange(self.n)) % self.n
+        cand = occ[order] & ~ref[order]
+        if cand.any():
+            k = int(np.argmax(cand))
+            swept = order[:k]
+            ref[swept[occ[swept]]] = False
+        elif occ.any():
+            k = int(np.argmax(occ[order]))
+            ref[occ] = False          # full revolution: everyone spent theirs
+        else:
+            return None, ref
+        victim = int(order[k])
+        self.hand = (victim + 1) % self.n
+        return victim, ref
+
     def select(self, occupied: Callable[[int], bool],
                referenced: Callable[[int], bool],
                clear: Callable[[int], None]) -> Optional[int]:
-        for _ in range(2 * self.n):
-            lane = self.hand
-            self.hand = (self.hand + 1) % self.n
-            if not occupied(lane):
-                continue
-            if referenced(lane):
-                clear(lane)
-            else:
-                return lane
-        # all referenced: round-robin fallback (the paper's random fallback)
-        for off in range(self.n):
-            lane = (self.hand + off) % self.n
-            if occupied(lane):
-                return lane
-        return None
+        occ = np.array([bool(occupied(i)) for i in range(self.n)])
+        ref = np.array([occ[i] and bool(referenced(i)) for i in range(self.n)])
+        victim, new_ref = self.select_mask(occ, ref)
+        for i in np.nonzero(ref & ~new_ref)[0]:
+            clear(int(i))
+        return victim

@@ -485,17 +485,41 @@ def decode_step(params: Params, cache: Dict[str, Any], tokens: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
-            scfg: ServeConfig, max_len: int
+            scfg: ServeConfig, max_len: int,
+            lens: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Run the full prompt [B,S], return (last-token logits, filled cache).
 
     Prefix tokens older than the hot window are written compressed; the last
-    W tokens populate the ring. (The bulk-compression path of the engine.)"""
+    W tokens populate the ring. (The bulk-compression path of the engine.)
+
+    ``lens`` [B] gives each row's true prompt length for right-padded
+    batches (length bucketing): the ring holds the last W *real* tokens,
+    ``cold_len`` is the real compressed length, and the returned logits are
+    each row's last real token's. Padded positions never enter the cache's
+    valid range, so a padded row decodes identically to an unpadded one.
+    ``lens=None`` means every row is exactly S tokens."""
     x = T.embed(params, batch, cfg)
     B, S, _ = x.shape
     W = scfg.hot_window
     bits = scfg.kv_rate_bits
     pos = jnp.arange(S)[None, :]
+    lens_arr = (jnp.full((B,), S, jnp.int32) if lens is None
+                else jnp.asarray(lens, jnp.int32))
+
+    def last_logits(x):
+        """Per-row logits at the last real token (lens-1)."""
+        idx = jnp.clip(lens_arr - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # [B,1,d]
+        return T.unembed(params, x_last, cfg)[:, 0]
+
+    def ring_slots(last):
+        """Position held by ring slot s right after token ``last``: the
+        largest p <= last with p === s (mod W). [B] -> [B, W]; p < 0 means
+        the slot holds no real token (short prompt) — its (clipped-gather)
+        content is masked out by decode's hot_valid test."""
+        s = jnp.arange(W)[None, :]
+        return last[:, None] - ((last[:, None] - s) % W)
 
     def fill_gqa(k, v):
         """k,v [B,S,Hkv,D] -> cache slices for one site."""
@@ -505,18 +529,14 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
         vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         kc, ks = quantize_blocks(kp, bits, D)
         vc, vs = quantize_blocks(vp, bits, D)
-        # ring: last W tokens at slot p % W
-        idxs = S - W + jnp.arange(W)
-        ring_src = jnp.take(k, jnp.maximum(idxs, 0) % S, axis=1)
-        vring_src = jnp.take(v, jnp.maximum(idxs, 0) % S, axis=1)
-        slots = (idxs % W)
-        k_hot = jnp.zeros((B, W, Hkv, D), jnp.bfloat16).at[:, slots].set(
-            ring_src.astype(jnp.bfloat16))
-        v_hot = jnp.zeros((B, W, Hkv, D), jnp.bfloat16).at[:, slots].set(
-            vring_src.astype(jnp.bfloat16))
+        # ring: last W real tokens, right-aligned at slot p % W
+        p = ring_slots(lens_arr - 1)                              # [B, W]
+        safe = jnp.clip(p, 0, S - 1)[:, :, None, None]
+        k_hot = jnp.take_along_axis(k, safe, axis=1).astype(jnp.bfloat16)
+        v_hot = jnp.take_along_axis(v, safe, axis=1).astype(jnp.bfloat16)
         return {"k_codes": kc, "k_scales": ks[..., 0], "v_codes": vc,
                 "v_scales": vs[..., 0], "k_hot": k_hot, "v_hot": v_hot,
-                "cold_len": jnp.full((B,), max(S - W, 0), jnp.int32)}
+                "cold_len": jnp.maximum(lens_arr - W, 0)}
 
     if cfg.family == "ssm":
         def body(x, lp):
@@ -531,8 +551,7 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
             conv_tail = xs[:, -(ssm.d_conv - 1):].astype(jnp.bfloat16)
             return x + y, {"h": hT, "conv": conv_tail}
         x, states = jax.lax.scan(body, x, params["layers"])
-        logits = T.unembed(params, x, cfg)[:, -1]
-        return logits, {"ssm": states}
+        return last_logits(x), {"ssm": states}
 
     if cfg.family == "hybrid":
         period = cfg.attn_period or cfg.num_layers
@@ -569,8 +588,7 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
             return (x, g + 1), site
 
         (x, _), cache = jax.lax.scan(gbody, (x, jnp.int32(0)), params["layers"])
-        logits = T.unembed(params, x, cfg)[:, -1]
-        return logits, cache
+        return last_logits(x), cache
 
     if cfg.attn_kind == "mla":
         def body(x, lp):
@@ -583,16 +601,15 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
             pad = max_len - S
             latp = jnp.pad(lat, ((0, 0), (0, pad), (0, 0)))
             c, s = quantize_blocks(latp, bits, R)
-            idxs = S - W + jnp.arange(W)
-            ring_src = jnp.take(lat, jnp.maximum(idxs, 0) % S, axis=1)
-            lat_hot = jnp.zeros((B, W, R), jnp.bfloat16).at[:, idxs % W].set(
-                ring_src.astype(jnp.bfloat16))
+            p = ring_slots(lens_arr - 1)                          # [B, W]
+            safe = jnp.clip(p, 0, S - 1)[:, :, None]
+            lat_hot = jnp.take_along_axis(lat, safe, axis=1).astype(
+                jnp.bfloat16)
             return x, {"lat_codes": c, "lat_scales": s[..., 0],
                        "lat_hot": lat_hot,
-                       "cold_len": jnp.full((B,), max(S - W, 0), jnp.int32)}
+                       "cold_len": jnp.maximum(lens_arr - W, 0)}
         x, cache = jax.lax.scan(body, x, params["layers"])
-        logits = T.unembed(params, x, cfg)[:, -1]
-        return logits, cache
+        return last_logits(x), cache
 
     def body(x, lp):
         h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
@@ -609,5 +626,4 @@ def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
         return x + y, fill_gqa(k, v)
 
     x, cache = jax.lax.scan(body, x, params["layers"])
-    logits = T.unembed(params, x, cfg)[:, -1]
-    return logits, cache
+    return last_logits(x), cache

@@ -1,1 +1,2 @@
-from repro.serve import engine  # noqa: F401
+from repro.serve.engine import Engine  # noqa: F401
+from repro.serve.serial import SerialEngine  # noqa: F401

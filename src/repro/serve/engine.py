@@ -6,19 +6,48 @@ The engine is the request-granular face of the paper's pool:
     decode_step) — their recent tokens sit uncompressed in the hot ring
     (promoted region), older tokens in the quantized region;
   * a **preempted** request is *demoted*: its hot ring is quantized into the
-    codes region (always a clean demotion — KV is append-only, the compressed
-    copy is the only copy needed) and the lane is freed;
-  * **resume** is a promotion — and because decode reads compressed pages
-    directly (fused dequant attention), promotion moves *zero* KV bytes: the
-    lane just adopts the parked codes (cold_len = full length, empty ring).
-    This is the serving-level payoff of the paper's shadowed-promotion idea
-    taken to its limit for append-only data;
-  * victim selection uses a second-chance sweep over lanes (reference bit =
-    "generated a token since last sweep"), the paper's §4.4 policy at
-    request granularity.
+    codes region on device (always a clean demotion — KV is append-only) and
+    only the compressed codes + scales are parked on the host;
+  * **resume** is a promotion — the lane adopts the parked codes (cold_len =
+    full length, empty ring) and decode reads them directly through the fused
+    dequant attention: zero KV bytes are ever dequantized on promotion;
+  * **shadowed lanes** (§4.5 at request granularity): the parked copy is
+    *kept* after resume, and — because KV is append-only — its prefix stays
+    valid forever. ``Request.shadow_pos`` records how many tokens it covers;
+    a re-preempt moves only the suffix generated since the last park
+    (``pos - shadow_pos`` tokens), and an untouched resumed request moves
+    **zero bytes**: the shadow is simply re-validated, like ``shadow_valid``
+    pages in ``core/engine/ops.py``. Demotion cost is proportional to new
+    tokens, never to context length;
+  * victim selection is the §4.4 second-chance sweep over lanes (reference
+    bit = "generated a token since last sweep"), vectorized over all lanes
+    in one pass (``SecondChanceLanes.select_mask``).
 
-Scheduling: FIFO admission, optional round-robin quantum. All cache motion is
-counted in ``self.counters`` (bytes and events) for benchmarks/fig_serve.py.
+**Host-sync contract.** Lane bookkeeping (last token, position, reference
+bit, active mask, remaining budget) lives in device arrays and is advanced
+*inside* the jitted engine step — argmax, position advance, done detection
+and reference-bit updates all happen on device. The host performs exactly
+ONE device sync per decode step (``counters["step_syncs"]``): a single
+``device_get`` of the (tokens, done, ref) triple that drives per-request
+Python bookkeeping. Admission-path syncs (one per prefill bucket, one per
+demotion fetch) are counted separately in ``counters["admit_syncs"]``.
+
+**Prefill batching.** Fresh requests admitted in the same engine step are
+prefilled together, grouped into power-of-two length buckets (right-padded;
+``models/decode.prefill``'s ``lens`` argument keeps padded positions out of
+the cache's valid range, so a padded row decodes identically to an unpadded
+one). Attention-family models bucket freely; ssm/hybrid models group by
+exact length only (right-padding would pollute the recurrent state).
+
+Scheduling: FIFO admission, at most one preemption per engine step. All
+cache motion is counted in ``self.counters`` (bytes and events) for
+benchmarks/serve_bench.py: parked bytes are the *compressed* payload
+(codes + scales) of the moved tokens — the bf16 hot ring is quantized
+before parking, never moved raw.
+
+``serve.serial.SerialEngine`` keeps the per-lane host-loop implementation
+(per-request prefill, one sync per lane per step, no shadow) as the
+benchmark baseline; both engines share ``_EngineBase``.
 """
 from __future__ import annotations
 
@@ -31,11 +60,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.types import ModelConfig, ServeConfig
+from repro.core.compressor import quantize_blocks
 from repro.core.engine.policy import SecondChanceLanes
 from repro.models import decode as D
 from repro.models import transformer as T
 
 WAITING, RUNNING, PREEMPTED, DONE = "waiting", "running", "preempted", "done"
+
+# bf16 hot-ring leaves: quantized into the codes region on demotion, zeroed
+# on resume — never parked, never moved
+HOT_KEYS = ("k_hot", "v_hot", "lat_hot")
 
 
 @dataclass
@@ -47,33 +81,183 @@ class Request:
     generated: List[int] = field(default_factory=list)
     lane: int = -1
     pos: int = 0                      # next position to write
-    parked: Optional[Dict[str, np.ndarray]] = None   # demoted KV (codes only)
-    ref_bit: bool = True              # second-chance reference bit
+    parked: Optional[Dict[str, Any]] = None   # demoted KV (codes+scales only)
+    # shadow coverage (§4.5): tokens [0, shadow_pos) of ``parked`` match the
+    # device KV bit-for-bit — KV is append-only, so the prefix never goes
+    # stale. A preempt at pos == shadow_pos moves zero bytes; at
+    # pos > shadow_pos it moves only the (pos - shadow_pos)-token suffix.
+    shadow_pos: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Device-side engine ops (jitted once per (cfg, scfg, max_len) via
+# _compiled_fns; shared by every Engine/SerialEngine instance).
+# ---------------------------------------------------------------------------
+
+def _engine_step_impl(params, cache, state, embeds=None, *, cfg: ModelConfig,
+                      scfg: ServeConfig, max_len: int):
+    """One decode step over all lanes, lane bookkeeping advanced on device.
+
+    state: {tok,pos,remaining int32[lanes]; active,ref bool[lanes]}.
+    Returns (cache, new_state, done[lanes]) — the host fetches
+    (new_state.tok, done, new_state.ref) in one sync."""
+    logits, cache = D.decode_step(params, cache, state["tok"], state["pos"],
+                                  cfg, scfg, embeds)
+    active = state["active"]
+    tok = jnp.where(active, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    state["tok"])
+    pos = state["pos"] + active
+    remaining = state["remaining"] - active
+    done = active & ((remaining <= 0) | (pos >= max_len - 1))
+    new_state = {"tok": tok, "pos": pos, "remaining": remaining,
+                 "active": active & ~done, "ref": state["ref"] | active}
+    return cache, new_state, done
+
+
+def _prefill_impl(params, batch, lens, *, cfg: ModelConfig, scfg: ServeConfig,
+                  max_len: int):
+    """Bucketed prefill: (first tokens int32[B], cache). argmax happens on
+    device so admission costs one fetch of B scalars per bucket."""
+    logits, cache = D.prefill(params, batch, cfg, scfg, max_len, lens=lens)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def _ring_to_codes(codes, scales, hot, cold_len, pos, W: int, bits: int):
+    """Quantize the live ring tokens (positions [max(cold_len, pos-W), pos))
+    into the codes region — the device half of a lane demotion. Mirrors the
+    streaming eviction in ``models/decode._evict_to_codes`` but for the whole
+    ring at once. codes [Lyr,T,...], scales [Lyr,T,...], hot [Lyr,W,...,D]."""
+    T_ = codes.shape[1]
+    D_ = hot.shape[-1]
+    c, s = quantize_blocks(hot.astype(jnp.float32), bits, D_)
+    t = jnp.arange(T_)
+    sel = (t[None, :] >= cold_len[:, None]) & (t[None, :] >= pos - W) & \
+        (t[None, :] < pos)                                     # [Lyr, T]
+    slot = t % W
+    gc = jnp.take(c, slot, axis=1)                 # slot content per position
+    gs = jnp.take(s[..., 0], slot, axis=1)
+    selc = sel.reshape(sel.shape + (1,) * (codes.ndim - 2))
+    sels = sel.reshape(sel.shape + (1,) * (scales.ndim - 2))
+    return jnp.where(selc, gc, codes), jnp.where(sels, gs, scales)
+
+
+def _demote_lane_impl(lane_cache, pos, *, scfg: ServeConfig):
+    """Clean-demote one lane's cache slice: every ring token is quantized
+    into the codes region and cold_len advances to ``pos``; the hot ring
+    becomes dead weight (dropped by the host before parking). SSM state has
+    no compressed form and passes through raw (counted honestly)."""
+    W, bits = scfg.hot_window, scfg.kv_rate_bits
+    out = dict(lane_cache)
+    if "k_codes" in out:
+        out["k_codes"], out["k_scales"] = _ring_to_codes(
+            out["k_codes"], out["k_scales"], out["k_hot"], out["cold_len"],
+            pos, W, bits)
+        out["v_codes"], out["v_scales"] = _ring_to_codes(
+            out["v_codes"], out["v_scales"], out["v_hot"], out["cold_len"],
+            pos, W, bits)
+    if "lat_codes" in out:
+        out["lat_codes"], out["lat_scales"] = _ring_to_codes(
+            out["lat_codes"], out["lat_scales"], out["lat_hot"],
+            out["cold_len"], pos, W, bits)
+    if "cold_len" in out:
+        out["cold_len"] = jnp.maximum(out["cold_len"], pos)
+    return out
 
 
 @functools.lru_cache(maxsize=32)
-def _compiled_steps(cfg: ModelConfig, scfg: ServeConfig, max_len: int):
-    """Engine-shared jitted step/prefill fns. Cached on the hashable configs
-    so constructing N engines (tests, replicas) compiles once — a fresh
-    functools.partial per engine would key a fresh jit cache entry and
-    recompile everything."""
-    step = jax.jit(functools.partial(D.decode_step, cfg=cfg, scfg=scfg))
-    prefill = jax.jit(functools.partial(D.prefill, cfg=cfg, scfg=scfg,
-                                        max_len=max_len))
-    return step, prefill
+def _compiled_fns(cfg: ModelConfig, scfg: ServeConfig, max_len: int):
+    """Engine-shared jitted fns, cached on the hashable configs so
+    constructing N engines (tests, replicas) compiles once."""
+    step = jax.jit(functools.partial(_engine_step_impl, cfg=cfg, scfg=scfg,
+                                     max_len=max_len))
+    pre = jax.jit(functools.partial(_prefill_impl, cfg=cfg, scfg=scfg,
+                                    max_len=max_len))
+    demote = jax.jit(functools.partial(_demote_lane_impl, scfg=scfg))
+    decode = jax.jit(functools.partial(D.decode_step, cfg=cfg, scfg=scfg))
+    return step, pre, demote, decode
+
+
+# ---------------------------------------------------------------------------
+# Lane slice/install (batch axis 1; hybrid ssm leaves carry a period axis
+# before batch, so the ssm subtree is sliced on its own axis).
+# ---------------------------------------------------------------------------
+
+def _ssm_batch_axis(cache) -> int:
+    return 2 if "k_codes" in cache else 1     # hybrid: [G, period, B, ...]
 
 
 def _lane_slice(cache, lane: int):
-    """Extract one lane's cache (arrays indexed at batch axis 1)."""
-    return jax.tree_util.tree_map(lambda a: a[:, lane], cache)
+    ax = _ssm_batch_axis(cache)
+    out = {}
+    for k, v in cache.items():
+        if k == "ssm":
+            out[k] = jax.tree_util.tree_map(
+                lambda a: jnp.take(a, lane, axis=ax), v)
+        else:
+            out[k] = v[:, lane]
+    return out
 
 
 def _lane_install(cache, lane: int, lane_cache):
-    return jax.tree_util.tree_map(
-        lambda a, s: a.at[:, lane].set(s.astype(a.dtype)), cache, lane_cache)
+    ax = _ssm_batch_axis(cache)
+    out = {}
+    for k, v in cache.items():
+        if k == "ssm":
+            out[k] = jax.tree_util.tree_map(
+                lambda a, s: jnp.moveaxis(
+                    jnp.moveaxis(a, ax, 0).at[lane].set(
+                        s.astype(a.dtype)), 0, ax),
+                v, lane_cache[k])
+        else:
+            out[k] = v.at[:, lane].set(lane_cache[k].astype(v.dtype))
+    return out
 
 
-class Engine:
+def _lanes_install(cache, lanes: jnp.ndarray, sub_cache):
+    """Install a prefilled sub-batch (rows aligned with ``lanes``) into the
+    engine cache in one batched scatter per leaf."""
+    ax = _ssm_batch_axis(cache)
+    out = {}
+    for k, v in cache.items():
+        if k == "ssm":
+            out[k] = jax.tree_util.tree_map(
+                lambda a, s: jnp.moveaxis(
+                    jnp.moveaxis(a, ax, 0).at[lanes].set(
+                        jnp.moveaxis(s.astype(a.dtype), ax, 0)), 0, ax),
+                v, sub_cache[k])
+        else:
+            out[k] = v.at[:, lanes].set(sub_cache[k].astype(v.dtype))
+    return out
+
+
+def _moved_bytes(parked: Dict[str, Any], n_tokens: int, max_len: int) -> int:
+    """Bytes a park/restore actually moves: the compressed payload (codes +
+    scales) of ``n_tokens`` tokens, plus raw recurrent state for ssm/hybrid
+    in full (it has no compressed form and no append-only prefix). The
+    counter is the modeled CXL traffic of the motion — the full-length host
+    buffers are an implementation detail."""
+    total = 0
+    for k, v in parked.items():
+        if k == "ssm":
+            total += sum(int(a.nbytes)
+                         for a in jax.tree_util.tree_leaves(v))
+        elif k == "cold_len":
+            continue
+        else:
+            total += (int(v.nbytes) // max_len) * min(int(n_tokens), max_len)
+    return total
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
+
+
+# ---------------------------------------------------------------------------
+# Shared engine chassis: request/queue/lane bookkeeping, park/restore
+# mechanics, sync counting. Subclasses decide scheduling + decode structure.
+# ---------------------------------------------------------------------------
+
+class _EngineBase:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
                  max_len: int = 2048, seed: int = 0):
         self.cfg, self.scfg = cfg, scfg
@@ -86,15 +270,22 @@ class Engine:
         self.queue: List[int] = []
         self._next_rid = 0
         # victim selection goes through the same §4.4 policy shape as the
-        # pool's clock engine, at lane granularity (engine/policy.py)
+        # pool's clock engine, vectorized over all lanes (engine/policy.py)
         self._victim_policy = SecondChanceLanes(self.lanes)
+        self._ref = np.zeros((self.lanes,), bool)
         self.counters = {"promotions": 0, "demotions": 0, "preempt_bytes": 0,
-                         "resume_bytes": 0, "steps": 0, "tokens": 0}
-        self._step_fn, self._prefill_fn = _compiled_steps(cfg, scfg, max_len)
+                         "resume_bytes": 0, "steps": 0, "tokens": 0,
+                         "step_syncs": 0, "admit_syncs": 0,
+                         "shadow_repreempts": 0, "prefill_batches": 0}
+        (self._step_fn, self._prefill_fn, self._demote_fn,
+         self._decode_fn) = _compiled_fns(cfg, scfg, max_len)
 
     # -- client API ---------------------------------------------------------
 
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        if not 1 <= len(prompt) <= self.max_len - 1:
+            raise ValueError(f"prompt length {len(prompt)} outside "
+                             f"[1, {self.max_len - 1}]")
         rid = self._next_rid
         self._next_rid += 1
         self.requests[rid] = Request(rid, list(prompt), max_new_tokens)
@@ -109,7 +300,18 @@ class Engine:
             if not self.step():
                 return
 
-    # -- scheduling ---------------------------------------------------------
+    def step(self) -> bool:
+        raise NotImplementedError
+
+    # -- host <-> device ----------------------------------------------------
+
+    def _fetch(self, tree, kind: str):
+        """The ONLY place device values cross to the host. Each call is one
+        blocking sync, counted per path (step vs admission)."""
+        self.counters[kind] += 1
+        return jax.device_get(tree)
+
+    # -- shared mechanics ---------------------------------------------------
 
     def _free_lane(self) -> Optional[int]:
         for i, r in enumerate(self.lane_req):
@@ -117,131 +319,223 @@ class Engine:
                 return i
         return None
 
-    def _second_chance_victim(self) -> Optional[int]:
-        """Clock sweep over lanes: clear ref bits, pick first un-referenced."""
-        def _req(lane: int) -> Request:
-            return self.requests[self.lane_req[lane]]
+    def _park_lane(self, req: Request, lane: int) -> None:
+        """Demote the lane on device (quantize ring -> codes) and park the
+        compressed payload, charging only the suffix not already covered by
+        the request's shadow."""
+        covered = req.shadow_pos if req.parked is not None else 0
+        lane_cache = _lane_slice(self.cache, lane)
+        demoted = self._demote_fn(lane_cache, jnp.asarray(req.pos, jnp.int32))
+        kept = {k: v for k, v in demoted.items() if k not in HOT_KEYS}
+        req.parked = self._fetch(kept, "admit_syncs")
+        req.shadow_pos = req.pos
+        self.counters["preempt_bytes"] += _moved_bytes(
+            req.parked, req.pos - covered, self.max_len)
 
-        def _clear(lane: int) -> None:
-            _req(lane).ref_bit = False
+    def _install_parked(self, req: Request, lane: int) -> None:
+        """Promotion: install parked codes into the lane (empty ring, full
+        cold_len); no decompression happens (fused attention reads codes
+        directly) — zero KV bytes dequantized."""
+        lane_tree = {}
+        for k, a in self.cache.items():
+            if k in HOT_KEYS:
+                lane_tree[k] = jnp.zeros(a.shape[:1] + a.shape[2:], a.dtype)
+            elif k == "ssm":
+                lane_tree[k] = jax.tree_util.tree_map(jnp.asarray,
+                                                      req.parked[k])
+            else:
+                lane_tree[k] = jnp.asarray(req.parked[k])
+        self.cache = _lane_install(self.cache, lane, lane_tree)
+        self.counters["resume_bytes"] += _moved_bytes(req.parked, req.pos,
+                                                      self.max_len)
+        self.counters["promotions"] += 1
+        req.lane = lane
+        req.state = RUNNING
+        self.lane_req[lane] = req.rid
 
-        return self._victim_policy.select(
-            occupied=lambda lane: self.lane_req[lane] is not None,
-            referenced=lambda lane: _req(lane).ref_bit,
-            clear=_clear)
+
+class Engine(_EngineBase):
+    """Device-resident batched scheduler (module docstring has the design)."""
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
+                 max_len: int = 2048, seed: int = 0):
+        super().__init__(cfg, scfg, params, max_len, seed)
+        # device-resident lane bookkeeping, advanced inside the jitted step
+        self.state = {
+            "tok": jnp.zeros((self.lanes,), jnp.int32),
+            "pos": jnp.zeros((self.lanes,), jnp.int32),
+            "remaining": jnp.zeros((self.lanes,), jnp.int32),
+            "active": jnp.zeros((self.lanes,), bool),
+            "ref": jnp.zeros((self.lanes,), bool),
+        }
+        # ssm/hybrid recurrent state cannot tolerate right-padding: group by
+        # exact length instead of power-of-two buckets
+        self._bucketed = cfg.family not in ("ssm", "hybrid")
+
+    def _set_lane_state(self, lane: int, tok: int, pos: int, remaining: int
+                        ) -> None:
+        st = self.state
+        self.state = {
+            "tok": st["tok"].at[lane].set(tok),
+            "pos": st["pos"].at[lane].set(pos),
+            "remaining": st["remaining"].at[lane].set(remaining),
+            "active": st["active"].at[lane].set(True),
+            "ref": st["ref"].at[lane].set(True),
+        }
+        self._ref[lane] = True
+
+    def _clear_lane_state(self, lane: int) -> None:
+        st = self.state
+        self.state = dict(st, active=st["active"].at[lane].set(False),
+                          ref=st["ref"].at[lane].set(False))
+        self._ref[lane] = False
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        if not self._bucketed:
+            return n
+        return min(max(_next_pow2(n), 8), self.max_len)
 
     def _admit(self) -> None:
-        # fill free lanes first
+        fresh, resumed = [], []
+
+        def claim(rid: int, lane: int) -> None:
+            self.lane_req[lane] = rid
+            req = self.requests[rid]
+            (resumed if req.parked is not None else fresh).append((rid, lane))
+
         while self.queue:
             lane = self._free_lane()
             if lane is None:
                 break
-            self._start(self.queue.pop(0), lane)
+            claim(self.queue.pop(0), lane)
         # time-slicing: at most ONE preemption per engine step — the evicted
         # request rejoins the queue tail and waits its turn. (An unbounded
         # preempt-while-queue-nonempty loop never terminates: every
-        # preemption re-fills the queue it is trying to drain.)
+        # preemption re-fills the queue it is trying to drain.) Lanes claimed
+        # this step are not eligible victims (their KV is not installed yet).
         if self.queue:
-            lane = self._second_chance_victim()
-            if lane is not None:
-                self._preempt(lane)
-                self._start(self.queue.pop(0), lane)
+            claimed = {lane for _, lane in fresh + resumed}
+            occupied = np.array([r is not None and i not in claimed
+                                 for i, r in enumerate(self.lane_req)])
+            victim, new_ref = self._victim_policy.select_mask(occupied,
+                                                              self._ref)
+            if victim is not None:
+                self._ref = new_ref
+                self.state = dict(self.state, ref=jnp.asarray(new_ref))
+                self._preempt(victim)
+                claim(self.queue.pop(0), victim)
+        for rid, lane in resumed:
+            self._resume(self.requests[rid], lane)
+        if fresh:
+            self._start_fresh(fresh)
 
-    def _start(self, rid: int, lane: int) -> None:
-        req = self.requests[rid]
-        if req.parked is not None:
-            self._resume(req, lane)
-            return
-        # fresh request: single-lane prefill, then install codes+ring
-        prompt = np.asarray(req.prompt, np.int32)[None, :]
-        S = prompt.shape[1]
-        W = self.scfg.hot_window
-        if S < W:   # pad short prompts to the ring size
-            prompt = np.pad(prompt, ((0, 0), (W - S, 0)))
-            S = W
-        batch = {"tokens": jnp.asarray(prompt)}
-        if self.cfg.frontend != "none":
-            batch["embeds"] = jnp.zeros((1, S, self.cfg.d_model), jnp.bfloat16)
-        logits, lane_cache = self._prefill_fn(self.params, batch)
-        lane_cache = jax.tree_util.tree_map(lambda a: a[:, 0], lane_cache)
-        self.cache = _lane_install(self.cache, lane, lane_cache)
-        req.pos = S
-        req.lane = lane
-        req.state = RUNNING
-        req.ref_bit = True
-        self.lane_req[lane] = rid
-        tok = int(jnp.argmax(logits[0]))
-        req.generated.append(tok)
-        self.counters["promotions"] += 1
+    def _start_fresh(self, items) -> None:
+        """Batched prefill of all fresh admissions, grouped into length
+        buckets — one compile and one host sync per bucket instead of one
+        per request."""
+        groups: Dict[int, list] = {}
+        for rid, lane in items:
+            L = self._bucket(len(self.requests[rid].prompt))
+            groups.setdefault(L, []).append((rid, lane))
+        for L, grp in sorted(groups.items()):
+            k = len(grp)
+            Bp = _next_pow2(k)          # pad rows too: fewer compiled shapes
+            tokens = np.zeros((Bp, L), np.int32)
+            lens = np.ones((Bp,), np.int32)
+            for i, (rid, _) in enumerate(grp):
+                p = self.requests[rid].prompt
+                tokens[i, :len(p)] = p
+                lens[i] = len(p)
+            batch = {"tokens": jnp.asarray(tokens)}
+            if self.cfg.frontend != "none":
+                batch["embeds"] = jnp.zeros((Bp, L, self.cfg.d_model),
+                                            jnp.bfloat16)
+            toks, sub = self._prefill_fn(self.params, batch,
+                                         jnp.asarray(lens))
+            lanes_arr = jnp.asarray([lane for _, lane in grp])
+            ax = _ssm_batch_axis(self.cache)
+            real = {kk: (jax.tree_util.tree_map(
+                        lambda a: jax.lax.slice_in_dim(a, 0, k, axis=ax), vv)
+                        if kk == "ssm" else vv[:, :k])
+                    for kk, vv in sub.items()}
+            self.cache = _lanes_install(self.cache, lanes_arr, real)
+            toks_h = self._fetch(toks[:k], "admit_syncs")
+            self.counters["prefill_batches"] += 1
+            for i, (rid, lane) in enumerate(grp):
+                req = self.requests[rid]
+                req.generated.append(int(toks_h[i]))
+                req.pos = int(lens[i])
+                req.lane = lane
+                req.state = RUNNING
+                self.counters["promotions"] += 1
+                remaining = req.max_new_tokens - 1
+                if remaining <= 0 or req.pos >= self.max_len - 1:
+                    req.state = DONE
+                    req.lane = -1
+                    self.lane_req[lane] = None
+                else:
+                    self._set_lane_state(lane, int(toks_h[i]), req.pos,
+                                         remaining)
 
     def _preempt(self, lane: int) -> None:
-        """Demote: the lane's ring tokens are already quantized on aging; the
-        remainder (the ring itself) is quantized here — a clean demotion."""
+        """Demote the lane. A shadow still covering every token short-
+        circuits the whole thing: zero bytes move, the shadow is re-validated
+        (§4.5); a partially-covering shadow pays only for the uncovered
+        suffix (_park_lane). The zero-byte branch is the N=0 limit of the
+        suffix charge — in this engine's own loop a resumed lane always
+        decodes before it can be re-selected, so the limit case fires only
+        when a caller (scheduler churn, tests, serve_bench) preempts between
+        resume and decode; the organic payoff is the suffix-only charge."""
         rid = self.lane_req[lane]
         req = self.requests[rid]
-        lane_cache = _lane_slice(self.cache, lane)
-        parked = {}
-        host = jax.tree_util.tree_map(np.asarray, lane_cache)
-        parked["cache"] = host
-        req.parked = parked
-        bytes_moved = sum(a.nbytes for a in jax.tree_util.tree_leaves(host)
-                          if a.dtype == np.uint8)   # codes only: clean demote
-        self.counters["preempt_bytes"] += bytes_moved
+        if req.parked is not None and req.shadow_pos >= req.pos:
+            self.counters["shadow_repreempts"] += 1
+        else:
+            self._park_lane(req, lane)
         self.counters["demotions"] += 1
         req.state = PREEMPTED
         req.lane = -1
         self.lane_req[lane] = None
+        self._clear_lane_state(lane)
         self.queue.append(rid)
 
     def _resume(self, req: Request, lane: int) -> None:
-        """Promotion: install parked codes; no decompression happens (fused
-        attention reads codes directly) — zero KV bytes dequantized."""
-        lane_cache = jax.tree_util.tree_map(jnp.asarray, req.parked["cache"])
-        self.cache = _lane_install(self.cache, lane, lane_cache)
-        self.counters["resume_bytes"] += sum(
-            a.nbytes for a in jax.tree_util.tree_leaves(req.parked["cache"])
-            if a.dtype == np.uint8)
-        self.counters["promotions"] += 1
-        req.parked = None
-        req.lane = lane
-        req.state = RUNNING
-        req.ref_bit = True
-        self.lane_req[lane] = req.rid
+        """Promotion; the parked copy stays behind as a shadow — its prefix
+        (append-only KV) stays valid no matter how many tokens follow."""
+        self._install_parked(req, lane)
+        self._set_lane_state(lane, req.generated[-1], req.pos,
+                             req.max_new_tokens - len(req.generated))
 
     # -- decode step ---------------------------------------------------------
 
     def step(self) -> bool:
-        """One engine iteration. Returns False when no work remains."""
+        """One engine iteration. Returns False when no work remains.
+        Exactly one host sync per call once lanes are running."""
         self._admit()
         active = [(lane, rid) for lane, rid in enumerate(self.lane_req)
                   if rid is not None]
         if not active:
             return bool(self.queue)
-        tokens = np.zeros((self.lanes,), np.int32)
-        pos = np.zeros((self.lanes,), np.int32)
-        for lane, rid in active:
-            req = self.requests[rid]
-            tokens[lane] = req.generated[-1] if req.generated else 0
-            pos[lane] = req.pos
         kwargs = {}
         if self.cfg.frontend != "none":
             kwargs["embeds"] = jnp.zeros((self.lanes, self.cfg.d_model),
                                          jnp.bfloat16)
-        logits, self.cache = self._step_fn(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
-            **kwargs)
+        self.cache, self.state, done = self._step_fn(
+            self.params, self.cache, self.state, **kwargs)
         self.counters["steps"] += 1
-        logits = np.asarray(logits)
+        tok_h, done_h, ref_h = self._fetch(
+            (self.state["tok"], done, self.state["ref"]), "step_syncs")
+        self._ref = np.array(ref_h, bool, copy=True)
         for lane, rid in active:
             req = self.requests[rid]
             req.pos += 1
-            req.ref_bit = True
-            tok = int(np.argmax(logits[lane]))
-            req.generated.append(tok)
+            req.generated.append(int(tok_h[lane]))
             self.counters["tokens"] += 1
-            if len(req.generated) >= req.max_new_tokens or \
-                    req.pos >= self.max_len - 1:
+            if done_h[lane]:
                 req.state = DONE
                 req.lane = -1
+                req.parked = None          # free the shadow's host memory
                 self.lane_req[lane] = None
         return True

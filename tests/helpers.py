@@ -6,14 +6,14 @@ import numpy as np
 from repro.common.types import PoolConfig
 from repro.core import freelist as fl
 from repro.core import metadata as md
-from repro.core import pool as P
+from repro.core import engine as E
 
 
 def _np(x):
     return np.asarray(x)
 
 
-def check_pool_invariants(pool: P.Pool, cfg: PoolConfig) -> None:
+def check_pool_invariants(pool: E.Pool, cfg: PoolConfig) -> None:
     meta = _np(pool.meta)
     activity = _np(pool.activity)
     cfree_items = _np(pool.cfree.items)[: int(pool.cfree.top)]
@@ -80,7 +80,7 @@ def check_pool_invariants(pool: P.Pool, cfg: PoolConfig) -> None:
                 f"activity[{pidx}] allocated but page {ospn} does not own it"
 
     # conservation: singles partition into free + referenced
-    n_single = P.n_single_chunks(cfg)
+    n_single = E.n_single_chunks(cfg)
     n_groups = (cfg.n_cchunks - n_single) // 8
     total = n_single + 8 * n_groups
     assert len(free_chunks) + len(referenced_chunks) == total, \

@@ -11,7 +11,9 @@ except ImportError:          # optional dev dependency; see requirements-dev.txt
     HAVE_HYPOTHESIS = False
 
 from repro.common.types import PoolConfig, replace
-from repro.core import pool as P
+from repro.core import engine as E
+
+POL = E.DEFAULT_POLICY
 from helpers import check_pool_invariants
 
 CFG = PoolConfig(n_pages=64, n_cchunks=512, n_pchunks=32, mcache_sets=4,
@@ -26,16 +28,16 @@ def _page(i, scale=0.1):
 
 @pytest.fixture(scope="module")
 def warm_pool():
-    pool = P.make_pool(CFG)
+    pool = E.make_pool(CFG)
     for i in range(48):
-        pool = P.host_write_page(pool, CFG, jnp.asarray(i), _page(i))
+        pool = E.host_write_page(pool, CFG, POL, jnp.asarray(i), _page(i))
     return pool
 
 
 def test_write_read_cycle(warm_pool):
     pool = warm_pool
     for i in range(48):
-        pool, vals = P.host_read_block(pool, CFG, jnp.asarray(i), jnp.asarray(0))
+        pool, vals = E.host_read_block(pool, CFG, POL, jnp.asarray(i), jnp.asarray(0))
         ref = np.asarray(_page(i)[:CFG.vals_per_block], np.float32)
         got = np.asarray(vals, np.float32)
         assert np.abs(got - ref).max() <= CFG.tol4 * np.abs(ref).max() + 1e-6, i
@@ -46,11 +48,11 @@ def test_shadowed_promotion_clean_demotions(warm_pool):
     """Read-only traffic after the warmup must produce clean demotions
     (§4.5: no recompression for unmodified pages)."""
     pool = warm_pool
-    base = P.counters_dict(pool)
+    base = E.counters_dict(pool)
     for rep in range(2):
         for i in range(48):
-            pool, _ = P.host_read_block(pool, CFG, jnp.asarray(i), jnp.asarray(rep))
-    c = P.counters_dict(pool)
+            pool, _ = E.host_read_block(pool, CFG, POL, jnp.asarray(i), jnp.asarray(rep))
+    c = E.counters_dict(pool)
     clean = c["demotions_clean"] - base["demotions_clean"]
     dirty = c["demotions_dirty"] - base["demotions_dirty"]
     # every page demoted in the read phase was re-promoted from its shadow at
@@ -62,14 +64,14 @@ def test_shadowed_promotion_clean_demotions(warm_pool):
 
 
 def test_zero_page_elision():
-    pool = P.make_pool(CFG)
-    pool = P.host_write_page(pool, CFG, jnp.asarray(0), jnp.zeros((CFG.vals_per_page,), jnp.bfloat16))
+    pool = E.make_pool(CFG)
+    pool = E.host_write_page(pool, CFG, POL, jnp.asarray(0), jnp.zeros((CFG.vals_per_page,), jnp.bfloat16))
     # force demotion so the zero page gets compressed (to nothing)
     for i in range(1, 40):
-        pool = P.host_write_page(pool, CFG, jnp.asarray(i), _page(i))
-    before = P.counters_dict(pool)
-    pool, vals = P.host_read_block(pool, CFG, jnp.asarray(0), jnp.asarray(0))
-    after = P.counters_dict(pool)
+        pool = E.host_write_page(pool, CFG, POL, jnp.asarray(i), _page(i))
+    before = E.counters_dict(pool)
+    pool, vals = E.host_read_block(pool, CFG, POL, jnp.asarray(0), jnp.asarray(0))
+    after = E.counters_dict(pool)
     assert jnp.all(vals == 0)
     if after["zero_served"] > before["zero_served"]:
         # zero pages are served from metadata alone: no data traffic
@@ -84,11 +86,11 @@ def test_read_your_writes(warm_pool):
     for i in range(6):
         blk = (jax.random.normal(jax.random.fold_in(KEY, 999 + i),
                                  (CFG.vals_per_block,)) * 0.3).astype(jnp.bfloat16)
-        pool = P.host_write_block(pool, CFG, jnp.asarray(i), jnp.asarray(2), blk)
-        pool, rb = P.host_read_block(pool, CFG, jnp.asarray(i), jnp.asarray(2))
+        pool = E.host_write_block(pool, CFG, POL, jnp.asarray(i), jnp.asarray(2), blk)
+        pool, rb = E.host_read_block(pool, CFG, POL, jnp.asarray(i), jnp.asarray(2))
         assert jnp.all(rb == blk)
         # I5 extended: the *other* blocks survive the write
-        pool, other = P.host_read_block(pool, CFG, jnp.asarray(i), jnp.asarray(0))
+        pool, other = E.host_read_block(pool, CFG, POL, jnp.asarray(i), jnp.asarray(0))
         ref = np.asarray(_page(i)[:CFG.vals_per_block], np.float32)
         got = np.asarray(other, np.float32)
         assert np.abs(got - ref).max() <= CFG.tol4 * np.abs(ref).max() + 1e-6
@@ -98,7 +100,7 @@ def test_read_your_writes(warm_pool):
 def test_write_invalidates_shadow(warm_pool):
     pool = warm_pool
     blk = jnp.ones((CFG.vals_per_block,), jnp.bfloat16)
-    pool = P.host_write_block(pool, CFG, jnp.asarray(3), jnp.asarray(1), blk)
+    pool = E.host_write_block(pool, CFG, POL, jnp.asarray(3), jnp.asarray(1), blk)
     w0 = int(np.asarray(pool.meta)[3, 0])
     assert (w0 >> 29) & 1 == 1      # dirty
     assert (w0 >> 28) & 1 == 0      # shadow dropped
@@ -107,20 +109,20 @@ def test_write_invalidates_shadow(warm_pool):
 
 
 def test_compression_ratio_sane(warm_pool):
-    r = float(P.compression_ratio(warm_pool, CFG))
+    r = float(E.compression_ratio(warm_pool, CFG))
     assert 0.9 < r < 4.0
 
 
 @pytest.mark.slow
 def test_shadow_disabled_all_dirty():
     cfg = replace(CFG, shadow=False)
-    pool = P.make_pool(cfg)
+    pool = E.make_pool(cfg)
     for i in range(48):
-        pool = P.host_write_page(pool, cfg, jnp.asarray(i), _page(i))
+        pool = E.host_write_page(pool, cfg, POL, jnp.asarray(i), _page(i))
     for rep in range(2):
         for i in range(48):
-            pool, _ = P.host_read_block(pool, cfg, jnp.asarray(i), jnp.asarray(0))
-    c = P.counters_dict(pool)
+            pool, _ = E.host_read_block(pool, cfg, POL, jnp.asarray(i), jnp.asarray(0))
+    c = E.counters_dict(pool)
     assert c["demotions_clean"] == 0          # no shadow -> every demotion recompresses
     assert c["demotions_dirty"] > 0
     check_pool_invariants(pool, cfg)
@@ -131,16 +133,16 @@ def _random_ops_invariants(ops):
     and block writes."""
     cfg = PoolConfig(n_pages=24, n_cchunks=256, n_pchunks=16, mcache_sets=2,
                      mcache_ways=2, demote_watermark=2, store_payload=True)
-    pool = P.make_pool(cfg)
+    pool = E.make_pool(cfg)
     shadow = {}  # ospn -> np page (oracle, exact for raw/zero; quantized else)
     for kind, ospn, blk, seed in ops:
         if kind == "wp":
             vals = (jax.random.normal(jax.random.PRNGKey(seed),
                                       (cfg.vals_per_page,)) * 0.1).astype(jnp.bfloat16)
-            pool = P.host_write_page(pool, cfg, jnp.asarray(ospn), vals)
+            pool = E.host_write_page(pool, cfg, POL, jnp.asarray(ospn), vals)
             shadow[ospn] = np.asarray(vals, np.float32)
         elif kind == "rb":
-            pool, vals = P.host_read_block(pool, cfg, jnp.asarray(ospn), jnp.asarray(blk))
+            pool, vals = E.host_read_block(pool, cfg, POL, jnp.asarray(ospn), jnp.asarray(blk))
             if ospn in shadow:
                 ref = shadow[ospn][blk * cfg.vals_per_block:(blk + 1) * cfg.vals_per_block]
                 got = np.asarray(vals, np.float32)
@@ -153,7 +155,7 @@ def _random_ops_invariants(ops):
         else:
             bvals = (jax.random.normal(jax.random.PRNGKey(seed),
                                        (cfg.vals_per_block,)) * 0.2).astype(jnp.bfloat16)
-            pool = P.host_write_block(pool, cfg, jnp.asarray(ospn), jnp.asarray(blk), bvals)
+            pool = E.host_write_block(pool, cfg, POL, jnp.asarray(ospn), jnp.asarray(blk), bvals)
             if ospn not in shadow:
                 shadow[ospn] = np.zeros((cfg.vals_per_page,), np.float32)
             shadow[ospn][blk * cfg.vals_per_block:(blk + 1) * cfg.vals_per_block] = \

@@ -82,6 +82,75 @@ def test_second_chance_lanes_policy():
     assert v2 in (0, 2, 3)                     # round-robin fallback
 
 
+def test_activity_write_charge_parity_serial_vs_batched():
+    """C_ACT_WR must be charged exactly where the activity word is written:
+    a metadata-cache eviction of a promoted page whose referenced bit is
+    *already set* costs nothing, on both the serial (ops.mcache_step) and
+    batched (_mcache_window) paths.
+
+    Direct construction: 6 promoted pages, a 1-set/2-way cache, distinct
+    accesses -> both paths evict pages 0..3 in the same multiset. Pages 0-1
+    have cleared referenced bits (2 flips -> 2 charges); pages 2-3 arrive
+    referenced (0 charges)."""
+    import jax
+    from repro.common.types import PoolConfig
+    from repro.core import metadata as md
+    from repro.core.engine import ops as O
+
+    policy = POLICIES["ibex"]
+    cfg = PoolConfig(n_pages=32, n_cchunks=256, n_pchunks=16, mcache_sets=1,
+                     mcache_ways=2, demote_watermark=0, store_payload=False)
+    pool = S.make_pool(cfg)
+    for i in range(6):   # first-touch writes promote; activity arrives ref=1
+        pool = O.write_page_op(pool, cfg, policy,
+                               jnp.asarray(i),
+                               jnp.zeros((cfg.vals_per_page,), jnp.bfloat16))
+    # clear the referenced bit of pages 0 and 1 (their P-chunk activity word)
+    act = pool.activity
+    for ospn in (0, 1):
+        pidx = int(md.get_ptr(pool.meta[ospn], md.PCHUNK_SLOT))
+        act = act.at[pidx].set(md.act_set_referenced(act[pidx], 0))
+    pool = pool._replace(counters=jnp.zeros_like(pool.counters), activity=act)
+
+    ospns = jnp.arange(6, dtype=jnp.int32)     # distinct: evicts pages 0..3
+    serial = pool
+    for i in range(6):
+        serial, _ = O.mcache_step(serial, cfg, policy, ospns[i])
+    batched = B._mcache_window(pool, cfg, policy, ospns)
+
+    cs, cb = S.counters_dict(serial), S.counters_dict(batched)
+    assert cs["activity_wr"] == cb["activity_wr"] == 2, (cs["activity_wr"],
+                                                         cb["activity_wr"])
+    assert cs["mcache_misses"] == cb["mcache_misses"]
+    # both paths leave identical referenced bits behind
+    ref_s = jax.numpy.asarray([md.act_referenced(e) for e in serial.activity])
+    ref_b = jax.numpy.asarray([md.act_referenced(e) for e in batched.activity])
+    assert (ref_s == ref_b).all()
+
+
+def test_replay_tail_pads_to_one_window():
+    """The batched front-end's serial tail is padded to exactly one window
+    with masked no-op accesses: a 5-access tail padded to window=8 must give
+    byte-identical counters to replaying the 5 accesses unpadded."""
+    policy = POLICIES["ibex"]
+    cfg = pool_cfg_for(policy, n_pages=32, n_pchunks=16, n_cchunks=512)
+    rates = make_rates_table(WORKLOADS["mcf"], 32, seed=3)
+    pool = S.make_pool(cfg, rates_table=jnp.asarray(rates))
+    pool = first_touch_populate(pool, cfg, policy, n_used=16)
+    ospn, wr, blk = make_trace(WORKLOADS["mcf"], n_accesses=21, n_pages=16,
+                               seed=3)
+    # window=16 -> one full window + a 5-access tail (padded to 16 inside)
+    pb = B.replay_trace(pool, cfg, policy, ospn, wr, blk, window=16)
+    # reference: same window head, tail replayed unpadded
+    ph = B._replay_windows(pool, cfg, policy,
+                           jnp.asarray(ospn[:16]).reshape(1, 16),
+                           jnp.asarray(wr[:16]).reshape(1, 16),
+                           jnp.asarray(blk[:16]).reshape(1, 16))
+    ps = B._replay_serial(ph, cfg, policy, jnp.asarray(ospn[16:]),
+                          jnp.asarray(wr[16:]), jnp.asarray(blk[16:]))
+    assert S.counters_dict(pb) == S.counters_dict(ps)
+
+
 @pytest.fixture(scope="module")
 def small_replay():
     # NOTE: the promoted region must be well above the demotion watermark —
