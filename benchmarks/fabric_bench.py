@@ -1,0 +1,228 @@
+"""Multi-expander fabric benchmark: scaling curves + skew sensitivity +
+counter-sum parity (DESIGN.md §11).
+
+  * **scaling** — the same merged trace replayed through fabrics of
+    1/2/4/8 expanders (per-expander pool dimensions fixed, so capacity
+    scales with N). Two rates per point: simulator wall-clock accesses/sec
+    (steady state, compile excluded — NOTE: under vmap both sides of every
+    masked-window branch execute for all expanders, so wall-clock carries
+    a documented constant and is NOT the delivered-bandwidth story) and
+    **modeled** accesses/sec: expanders serve in parallel, so modeled time
+    is the *bottleneck* expander's `simx.device.exec_time` over its own
+    traffic — that is the curve that scales with capacity and collapses
+    under skew.
+  * **skew** — a 4-expander fabric under WeightedInterleave placement with
+    a growing expander-0 page share: delivered rate + per-expander host
+    traffic share + spill activity (placement skew, not workload locality,
+    is the lever that kills delivered bandwidth on real multi-device CXL).
+  * **parity (asserted)** — an N=1 fabric is counter-for-counter identical
+    to ``batch.replay_trace`` on one pool, and an N=2 fabric's summed
+    counters equal the sum of single-pool replays of the merged trace's
+    per-expander partitions EXACTLY (static interleave, no spill). Against
+    ONE merged pool with N× regions + N× metadata cache, total internal
+    traffic agrees within the documented tolerance (shared-vs-sharded
+    cache and demotion cadence shift counters; see DESIGN.md §11).
+
+Writes ``BENCH_fabric.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import replace
+from repro.core.engine import batch as B
+from repro.core.engine import state as S
+from repro.core.engine.policy import POLICIES
+from repro.fabric import Fabric, StaticInterleave, WeightedInterleave
+from repro.simx import device as DEV
+from repro.simx.engine import TRAFFIC_KEYS, pool_cfg_for
+from repro.simx.trace import WORKLOADS, make_rates_table, make_trace
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_fabric.json"
+
+SCALES = (1, 2, 4, 8)
+SKEWS_Q = (0.5, 0.8)           # expander-0 page share at N=4
+SKEWS_F = (0.25, 0.5, 0.8)
+MERGED_POOL_TOL = 0.35         # documented tolerance vs ONE merged pool
+WL = "mcf"
+
+
+def _fabric(cfg, n, rates, seed, window, placement=None, **kw):
+    placement = placement or StaticInterleave(n, cfg.n_pages)
+    return Fabric(cfg, POLICIES["ibex"], placement, seed=seed,
+                  rates_table=jnp.asarray(rates), window=window, **kw)
+
+
+def _rate(make, ospn, wr, blk, reps: int):
+    """Steady-state accesses/sec: compile+warm once, then min-of-reps on
+    fresh fabrics (state shapes identical → jit cache hits). Returns
+    (rate, last fabric) so callers read counters without another replay."""
+    make().replay(ospn, wr, blk)                  # compile + warm
+    best = np.inf
+    for _ in range(reps):
+        fab = make()
+        t0 = time.perf_counter()
+        jax.block_until_ready(fab.replay(ospn, wr, blk).pools.counters)
+        best = min(best, time.perf_counter() - t0)
+    return len(ospn) / best, fab
+
+
+def _internal(c: Dict[str, int]) -> int:
+    return sum(c[k] for k in TRAFFIC_KEYS)
+
+
+def _modeled_time(per_expander: List[Dict[str, int]]) -> float:
+    """Delivered time of a fabric serving one trace: expanders run in
+    parallel, so the bottleneck expander's device-model time governs."""
+    times = []
+    for c in per_expander:
+        traffic = {"internal_accesses": _internal(c),
+                   "host_reads": c["host_reads"],
+                   "host_writes": c["host_writes"],
+                   "zero_served": c["zero_served"],
+                   "promotions": c["promotions"],
+                   "demotions_dirty": c["demotions_dirty"],
+                   "recompress_retry": c["recompress_retry"]}
+        times.append(DEV.exec_time(traffic, DEV.DeviceConfig()))
+    return max(times)
+
+
+def run(quick: bool, seed: int = 0) -> List[Dict]:
+    prom = 32                      # per-expander promoted region
+    n_pages = 256                  # shared OSPA page space: N=1 is 8x
+    #                                oversubscribed, N=8 fully promotes —
+    #                                the capacity side of the scaling story
+    n_accesses = 2048 if quick else 8192
+    window = 16
+    reps = 2 if quick else 4
+    cfg = pool_cfg_for(  # per-expander pool dimensions (fixed across N)
+        POLICIES["ibex"], n_pages=n_pages, n_pchunks=prom,
+        n_cchunks=2 * n_pages * 4)
+    spec = WORKLOADS[WL]
+    rates = make_rates_table(spec, n_pages, seed=seed)
+    ospn, wr, blk = make_trace(spec, n_accesses=n_accesses, n_pages=n_pages,
+                               seed=seed)
+    rows = []
+
+    # -- scaling curve -------------------------------------------------------
+    scaling: Dict[str, Dict[str, float]] = {}
+    for n in SCALES:
+        t0 = time.perf_counter()
+        acc, fab = _rate(lambda n=n: _fabric(cfg, n, rates, seed, window,
+                                             spill=False), ospn, wr, blk,
+                         reps)
+        per = fab.counters_by_expander()
+        modeled = n_accesses / _modeled_time(per)
+        scaling[str(n)] = {
+            "wallclock_acc_per_sec": acc,
+            "modeled_acc_per_sec": modeled,
+            "internal_accesses": _internal(fab.counters()),
+        }
+        rows.append({"name": f"fabric.scale.{n}x",
+                     "us": (time.perf_counter() - t0) * 1e6,
+                     "derived": f"wall={acc:,.0f}acc/s;"
+                                f"modeled={modeled:,.0f}acc/s;"
+                                f"internal={_internal(fab.counters())}"})
+
+    # -- skew sweep (N=4, spill live) ---------------------------------------
+    skew_rows = {}
+    for share in (SKEWS_Q if quick else SKEWS_F):
+        rest = (1.0 - share) / 3.0
+        mk = lambda share=share, rest=rest: _fabric(
+            cfg, 4, rates, seed, window,
+            placement=WeightedInterleave(4, n_pages,
+                                         [share, rest, rest, rest]),
+            spill=True, spill_interval=1024)
+        t0 = time.perf_counter()
+        acc, fab = _rate(mk, ospn, wr, blk, reps)
+        per = fab.counters_by_expander()
+        host = [c["host_reads"] + c["host_writes"] for c in per]
+        modeled = n_accesses / _modeled_time(per)
+        pages = np.bincount(fab.placement.assign(np.arange(n_pages)),
+                            minlength=4) / n_pages
+        # page share is what the placement controls; access share also
+        # depends on which zipf-head pages the hash lands on each expander
+        skew_rows[f"{share:.2f}"] = {
+            "wallclock_acc_per_sec": acc,
+            "modeled_acc_per_sec": modeled,
+            "page_share": pages.tolist(),
+            "host_share": [h / max(sum(host), 1) for h in host],
+            "spill": fab.spill_stats(),
+        }
+        rows.append({"name": f"fabric.skew.{share:.2f}",
+                     "us": (time.perf_counter() - t0) * 1e6,
+                     "derived": f"modeled={modeled:,.0f}acc/s;"
+                                f"e0_pages={pages[0]:.2f};"
+                                f"e0_host={host[0] / max(sum(host), 1):.2f};"
+                                f"spills={fab.spill_stats()['events']}"})
+
+    # -- parity (asserted) ---------------------------------------------------
+    fab1 = _fabric(cfg, 1, rates, seed, window, spill=False)
+    fab1.replay(ospn, wr, blk)
+    pool1 = S.pool_slice(S.make_pool_stack(cfg, 1, seed=seed,
+                                           rates_table=jnp.asarray(rates)), 0)
+    pool1 = B.replay_trace(pool1, cfg,
+                           fab1.policy, ospn, wr, blk, window=window)
+    assert fab1.counters() == S.counters_dict(pool1), \
+        "N=1 fabric drifted from single-pool replay"
+
+    placement = StaticInterleave(2, n_pages)
+    fab2 = _fabric(cfg, 2, rates, seed, window, placement=placement,
+                   spill=False)
+    fab2.replay(ospn, wr, blk)
+    eids = placement.route(ospn)
+    stack0 = S.make_pool_stack(cfg, 2, seed=seed,
+                               rates_table=jnp.asarray(rates))
+    total = {k: 0 for k in S.COUNTER_NAMES}
+    for e in range(2):
+        sel = eids == e
+        ref = B.replay_trace(S.pool_slice(stack0, e), cfg, fab2.policy,
+                             ospn[sel], wr[sel], blk[sel], window=window)
+        for k, v in S.counters_dict(ref).items():
+            total[k] += v
+    assert fab2.counters() == total, \
+        "N=2 fabric counter sums drifted from per-shard single-pool replays"
+
+    merged_cfg = replace(cfg, n_pchunks=cfg.n_pchunks * 2,
+                         n_cchunks=cfg.n_cchunks * 2,
+                         mcache_sets=cfg.mcache_sets * 2)
+    poolm = S.make_pool(merged_cfg, seed=seed,
+                        rates_table=jnp.asarray(rates))
+    poolm = B.replay_trace(poolm, merged_cfg, fab2.policy, ospn, wr, blk,
+                           window=window)
+    cm = S.counters_dict(poolm)
+    rel = abs(_internal(fab2.counters()) - _internal(cm)) / \
+        max(_internal(cm), 1)
+    assert rel < MERGED_POOL_TOL, (rel, MERGED_POOL_TOL)
+    rows.append({"name": "fabric.parity", "us": 0.0,
+                 "derived": f"per_shard=exact;merged_pool_rel={rel:.3f}"
+                            f"(tol={MERGED_POOL_TOL})"})
+
+    payload = {
+        "meta": {"workload": WL, "n_accesses": n_accesses,
+                 "promoted_pages_per_expander": prom, "n_pages": n_pages,
+                 "window": window, "reps": reps, "seed": seed,
+                 "quick": quick,
+                 "unit": "accesses/sec; wallclock = simulator steady state "
+                         "(compile excluded; vmapped masked branches carry "
+                         "a constant), modeled = bottleneck expander's "
+                         "device-model time (the delivered-bandwidth "
+                         "curve)"},
+        "scaling": scaling,
+        "skew": skew_rows,
+        "parity": {"per_shard_exact": True,
+                   "merged_pool_rel_diff": rel,
+                   "merged_pool_tolerance": MERGED_POOL_TOL},
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    rows.append({"name": "fabric.json", "us": 0.0,
+                 "derived": f"json={JSON_PATH.name}"})
+    return rows

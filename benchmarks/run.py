@@ -17,21 +17,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="one seed, threaded end-to-end (trace generation, "
+                         "per-expander RNG streams, model params) so every "
+                         "BENCH_*.json run is bit-reproducible")
     args = ap.parse_args()
     quick = not args.full
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
-    from benchmarks import (kernel_bench, paper_figs, serve_bench, simx_bench,
-                            system_bench)
+    from benchmarks import (fabric_bench, kernel_bench, paper_figs,
+                            serve_bench, simx_bench, system_bench)
 
-    suites = [(f.__name__, lambda q, f=f: f(q)) for f in paper_figs.ALL_FIGS]
-    suites.append(("kernel", kernel_bench.run))
-    suites.append(("system", system_bench.run))
+    suites = [(f.__name__, lambda q, s, f=f: f(q)) for f in
+              paper_figs.ALL_FIGS]
+    suites.append(("kernel", lambda q, s: kernel_bench.run(q)))
+    suites.append(("system", lambda q, s: system_bench.run(q)))
     # trace-replay throughput; also writes BENCH_simx.json (accesses/sec per
     # scheme, serial-vs-batched) so the perf trajectory is machine-readable
     suites.append(("simx", simx_bench.run))
     # serving engine: per-lane baseline vs batched scheduler -> BENCH_serve.json
     suites.append(("serve", serve_bench.run))
+    # multi-expander fabric: 1/2/4/8 scaling + skew + parity -> BENCH_fabric.json
+    suites.append(("fabric", fabric_bench.run))
 
     print("name,us_per_call,derived")
     failed = 0
@@ -39,7 +46,7 @@ def main() -> None:
         if only and not any(name.startswith(o) or o in name for o in only):
             continue
         try:
-            for row in fn(quick):
+            for row in fn(quick, args.seed):
                 print(f"{row['name']},{row['us']:.1f},{row['derived']}",
                       flush=True)
         except Exception as e:  # keep the suite running; count failures

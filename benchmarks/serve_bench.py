@@ -77,15 +77,15 @@ def _shadow_repreempt_bytes(cfg, scfg, params, prompts, max_len) -> int:
     return eng.counters["preempt_bytes"] - before
 
 
-def run(quick: bool) -> List[Dict]:
+def run(quick: bool, seed: int = 0) -> List[Dict]:
     cfg = get_reduced(ARCH)
     scfg = ServeConfig(max_running=2, hot_window=16, attn_chunk=32,
                        kv_rate_bits=8)
     max_len = 128
     n_requests = 6 if quick else 12
     new_tokens = 8 if quick else 16
-    params, _ = T.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
+    params, _ = T.init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
     prompts = _workload(rng, cfg.vocab_size, n_requests)
 
     # warm the jit caches with a tiny run of each engine so the timed pass
@@ -112,7 +112,7 @@ def run(quick: bool) -> List[Dict]:
     payload = {
         "meta": {"arch": ARCH, "lanes": scfg.max_running,
                  "requests": n_requests, "new_tokens": new_tokens,
-                 "max_len": max_len, "quick": quick,
+                 "max_len": max_len, "quick": quick, "seed": seed,
                  "unit": "decode tokens/sec, admission included"},
         "serial_tok_per_sec": tok_s,
         "batched_tok_per_sec": tok_b,

@@ -56,7 +56,7 @@ def _steady_rates(fn_a, fn_b, n_accesses: int, reps: int):
     return n_accesses / min(ta), n_accesses / min(tb)
 
 
-def run(quick: bool) -> List[Dict]:
+def run(quick: bool, seed: int = 0) -> List[Dict]:
     schemes = Q_SCHEMES if quick else F_SCHEMES
     workloads = Q_WL if quick else F_WL
     # the paper-fig suite's operating point (paper_figs.PROM_Q/N_Q scale)
@@ -76,9 +76,10 @@ def run(quick: bool) -> List[Dict]:
         serial[s], batched[s] = {}, {}
         for wl in workloads:
             spec = WORKLOADS[wl]
-            pool, n_used = _warmed_pool(policy, cfg, spec, n_pages, prom)
+            pool, n_used = _warmed_pool(policy, cfg, spec, n_pages, prom,
+                                        seed=seed)
             ospn, wr, blk = make_trace(spec, n_accesses=n_accesses,
-                                       n_pages=n_used, seed=0)
+                                       n_pages=n_used, seed=seed)
             args = (jnp.asarray(ospn), jnp.asarray(wr), jnp.asarray(blk))
             t0 = time.perf_counter()
             serial[s][wl], batched[s][wl] = _steady_rates(
@@ -98,7 +99,7 @@ def run(quick: bool) -> List[Dict]:
     gm = float(np.exp(np.mean(np.log(speedups))))
     payload = {
         "meta": {"n_accesses": n_accesses, "promoted_pages": prom,
-                 "window": window, "reps": reps, "quick": quick,
+                 "window": window, "reps": reps, "quick": quick, "seed": seed,
                  "unit": "accesses/sec (steady state, compile excluded)"},
         "serial_acc_per_sec": serial,
         "batched_acc_per_sec": batched,

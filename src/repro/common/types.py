@@ -218,6 +218,15 @@ class PoolConfig:
     compact: bool = True               # metadata compaction (§4.7)
     zero_elision: bool = True
     store_payload: bool = True         # Layer A carries real bytes; simx does not
+    # background-demotion cadence of the batched front-end (engine/batch.py):
+    # "window" (default) tops up the free-P-chunk list once per window to a
+    # raised target; "access" reproduces the serial engine's per-access
+    # cadence (top up to the bare watermark each window AND re-check before
+    # every slow access) so small-pool configs — where the watermark is a
+    # large fraction of the promoted region and cadence visibly shifts
+    # traffic — can be compared serial-vs-batched tightly
+    # (tests/test_simx_schemes.py::test_small_pool_cadence_knob_bounds_divergence)
+    demote_cadence: str = "window"     # "window" | "access"
     # quantization tolerances for the rate-adaptive compressor (relative to
     # block amax; int8 of bf16 data carries ~0.4% inherent rounding)
     tol4: float = 0.10
@@ -294,6 +303,10 @@ class ServeConfig:
                                        # promoted region of the KV pool)
     attn_chunk: int = 2048             # kv chunk for the decode attention scan
     fused_dequant_attention: bool = True  # False = paper-faithful promote-then-read
+    # fabric-aware serving: lanes are striped across this many expanders;
+    # preempted payloads park per-expander and victim selection balances
+    # parked load across expanders (serve/engine.py, fabric/)
+    n_expanders: int = 1
     pool: PoolConfig = field(default_factory=PoolConfig)
 
 

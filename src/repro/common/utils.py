@@ -13,6 +13,13 @@ import numpy as np
 # Bit-field packing helpers (uint32 words).
 # ---------------------------------------------------------------------------
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1). Shared by the serving engine's
+    prefill bucketing and the fabric's window-count bucketing — both bound
+    compiled-shape counts to O(log) distinct sizes."""
+    return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
+
+
 def get_bits(word: jnp.ndarray, lo: int, width: int) -> jnp.ndarray:
     """Extract ``width`` bits starting at bit ``lo`` from uint32 word(s)."""
     mask = jnp.uint32((1 << width) - 1)

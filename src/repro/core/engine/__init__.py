@@ -24,13 +24,19 @@ from repro.core.engine.policy import (DEFAULT_POLICY, POLICIES, CompressoPolicy,
                                       TmccPolicy)
 from repro.core.engine.state import (COUNTER_NAMES, CTR_DTYPE, NUM_COUNTERS,
                                      Pool, compression_ratio, counters_dict,
-                                     make_pool, n_single_chunks, total_traffic)
+                                     make_pool, make_pool_stack,
+                                     n_single_chunks, per_expander_counters,
+                                     pool_slice, pool_unslice,
+                                     stacked_counters, stacked_counters_dict,
+                                     total_traffic)
 
 __all__ = [
     "batch", "ops", "policy", "state",
     "Pool", "make_pool", "n_single_chunks", "counters_dict",
     "compression_ratio", "total_traffic", "COUNTER_NAMES", "NUM_COUNTERS",
     "CTR_DTYPE",
+    "make_pool_stack", "pool_slice", "pool_unslice", "stacked_counters",
+    "stacked_counters_dict", "per_expander_counters",
     "Policy", "IbexPolicy", "TmccPolicy", "DylectPolicy", "MxtPolicy",
     "DmcPolicy", "CompressoPolicy", "SecondChanceLanes", "POLICIES",
     "DEFAULT_POLICY",

@@ -22,12 +22,18 @@ window of W accesses per step:
 Fast accesses mutate nothing but counters, so a fast predecessor can never
 invalidate a later classification; slow accesses re-read live metadata.
 The divergences from the serial engine are (a) background-demotion timing
-(per window instead of per access), (b) window-granular metadata-cache
-recency, and (c) a fast hot-read of a page a slow access demoted earlier
-in the same window is still accounted as hot. All three shift counters
-within noise at sane region ratios (asserted by
+(per window instead of per access — ``cfg.demote_cadence="access"``
+removes this one for small-pool comparisons), (b) window-granular
+metadata-cache recency, and (c) a fast hot-read of a page a slow access
+demoted earlier in the same window is still accounted as hot. All shift
+counters within noise at sane region ratios (asserted by
 tests/test_simx_schemes.py); invariants I1-I5 are unaffected
 (tests/test_pool_properties.py).
+
+``_replay_windows_masked`` is the window scan over a *padded* trace — the
+multi-expander fabric (repro.fabric) vmaps it over a stacked pool state;
+it reuses the window/serial bodies above unchanged so fabric counters are
+bit-identical to single-pool replays of each expander's partition.
 """
 from __future__ import annotations
 
@@ -134,9 +140,20 @@ def _window_step(pool: Pool, cfg: PoolConfig, policy: Policy, xs):
     # ~3x (measured on CPU).
     # the raise is bounded by the watermark so small pools keep (almost)
     # the serial engine's residency: a higher target would evict hot pages
-    # the serial engine keeps resident and skew traffic at small scales
-    extra = min(window // 4, max(2, cfg.demote_watermark // 2))
-    budget = max(4, window // 4)
+    # the serial engine keeps resident and skew traffic at small scales.
+    # cfg.demote_cadence == "access" drops the raise entirely and instead
+    # re-checks the watermark before every slow access (below) — the serial
+    # engine's cadence, for small pools where the raise itself skews traffic
+    per_access = cfg.demote_cadence == "access"
+    if per_access:
+        # no raised target; the window-start top-up may fully catch up (the
+        # serial engine had one demote opportunity before every one of the
+        # preceding fast accesses) and every slow access re-checks below
+        extra = 0
+        budget = window
+    else:
+        extra = min(window // 4, max(2, cfg.demote_watermark // 2))
+        budget = max(4, window // 4)
     pool = ops.demote_if_needed(pool, cfg, policy, max_demotes=budget,
                                 watermark=cfg.demote_watermark + extra)
 
@@ -180,6 +197,9 @@ def _window_step(pool: Pool, cfg: PoolConfig, policy: Policy, xs):
                                        jnp.arange(window)))
 
     def process(k, p: Pool) -> Pool:
+        if per_access:
+            p = ops.demote_if_needed(p, cfg, policy)
+
         def do_write(r: Pool) -> Pool:
             c = policy.on_host_access(bump(r.counters, C_HOST_WR), True)
             r = r._replace(counters=c)
@@ -224,6 +244,23 @@ def _replay_windows(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
     return pool
 
 
+def _serial_access(pool: Pool, cfg: PoolConfig, policy: Policy, ospn, w, blk
+                   ) -> Pool:
+    """One access through the serial per-access path (full prologue — the
+    exact body `_replay_serial` scans and the masked window path's partial
+    windows replay; sharing it is what makes the fabric's padded replay
+    counter-exact against `replay_trace`)."""
+    zero_block = jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
+
+    def do_write(q):
+        return ops._host_write_block(q, cfg, policy, ospn, blk, zero_block)
+
+    def do_read(q):
+        return ops._host_read_block(q, cfg, policy, ospn, blk)[0]
+
+    return jax.lax.cond(w, do_write, do_read, pool)
+
+
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def _replay_serial(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
                    writes, blocks, valid=None) -> Pool:
@@ -235,29 +272,69 @@ def _replay_serial(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
     bool mask adds an outer cond that makes masked-out accesses exact no-ops
     (pool and counters untouched) — the batched path pads its trace tail
     with them so every tail compiles at one shape."""
-    zero_block = jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
-
-    def access(p, ospn, w, blk):
-        def do_write(q):
-            return ops._host_write_block(q, cfg, policy, ospn, blk, zero_block)
-
-        def do_read(q):
-            return ops._host_read_block(q, cfg, policy, ospn, blk)[0]
-
-        return jax.lax.cond(w, do_write, do_read, p)
-
     if valid is None:
         def step(p, x):
-            return access(p, *x), None
+            return _serial_access(p, cfg, policy, *x), None
         pool, _ = jax.lax.scan(step, pool, (ospns, writes, blocks))
         return pool
 
     def step(p, x):
         ospn, w, blk, v = x
-        return jax.lax.cond(v, lambda q: access(q, ospn, w, blk),
-                            lambda q: q, p), None
+        return jax.lax.cond(
+            v, lambda q: _serial_access(q, cfg, policy, ospn, w, blk),
+            lambda q: q, p), None
 
     pool, _ = jax.lax.scan(step, pool, (ospns, writes, blocks, valid))
+    return pool
+
+
+def _replay_windows_masked(pool: Pool, cfg: PoolConfig, policy: Policy,
+                           ospns, writes, blocks, valid) -> Pool:
+    """Window scan over a *padded* trace: the multi-expander fabric's entry
+    point (fabric/replay.py vmaps it over a stacked pool state).
+
+    Each expander's trace partition is a prefix of real accesses followed by
+    padding, reshaped to [n_win, W] with a bool validity mask. Per window:
+
+      * all-valid   -> the exact `_window_step` body (same as
+                       `_replay_windows`);
+      * part-valid  -> the serial per-access body over the valid prefix
+                       (same as `replay_trace`'s padded serial tail);
+      * none-valid  -> exact no-op.
+
+    Padding sits at the end, so a padded replay walks full windows then one
+    partial window then no-ops — the very shapes `replay_trace` produces —
+    and its counters are bit-identical to an unpadded `replay_trace` of the
+    real prefix (asserted by tests/test_fabric.py). Under `vmap` the
+    three-way branch lowers to selects, so every expander pays the heavier
+    body's cost; fabric throughput numbers carry that constant honestly
+    (benchmarks/fabric_bench.py)."""
+    def scan_step(p, xs):
+        o, w, b, v = xs
+
+        def none_valid(q: Pool) -> Pool:
+            return q
+
+        def part_valid(q: Pool) -> Pool:
+            def step(q2, x):
+                ospn, wr, blk, vv = x
+                return jax.lax.cond(
+                    vv, lambda r: _serial_access(r, cfg, policy, ospn, wr,
+                                                 blk),
+                    lambda r: r, q2), None
+            q, _ = jax.lax.scan(step, q, (o, w, b, v))
+            return q
+
+        def all_valid(q: Pool) -> Pool:
+            return _window_step(q, cfg, policy, (o, w, b))[0]
+
+        branch = jnp.where(jnp.all(v), 2,
+                           jnp.where(jnp.any(v), 1, 0)).astype(jnp.int32)
+        return jax.lax.switch(branch, [none_valid, part_valid, all_valid],
+                              p), None
+
+    pool, _ = jax.lax.scan(scan_step, pool,
+                           (ospns, writes, blocks, valid))
     return pool
 
 

@@ -214,19 +214,32 @@ class SecondChanceLanes:
         self.n = n_lanes
         self.hand = 0
 
-    def select_mask(self, occupied, referenced):
+    def select_mask(self, occupied, referenced, groups=None, group_load=None):
         """One-pass sweep. occupied/referenced: bool[n] arrays. Returns
         (victim lane or None, new referenced bits). Semantics match the
         serial clock: ref bits of occupied lanes between the hand and the
         victim are cleared (their second chance); if every occupied lane is
         referenced, all are cleared and the first occupied lane after the
-        hand is taken (round-robin fallback)."""
+        hand is taken (round-robin fallback).
+
+        ``groups``/``group_load`` (fabric-aware serving): lanes carry an
+        expander id and every expander a current parked-payload load; among
+        the sweep's candidates the victim is the first lane belonging to
+        the least-loaded candidate expander, so preemptions park evenly
+        across expanders instead of piling onto whichever expander the hand
+        happens to point at. With ``groups=None`` behavior is unchanged."""
         occ = np.asarray(occupied, bool)
         ref = np.array(referenced, bool, copy=True)
         order = (self.hand + np.arange(self.n)) % self.n
         cand = occ[order] & ~ref[order]
         if cand.any():
-            k = int(np.argmax(cand))
+            if groups is None:
+                k = int(np.argmax(cand))
+            else:
+                pos = np.nonzero(cand)[0]
+                loads = np.asarray(group_load)[
+                    np.asarray(groups)[order[pos]]]
+                k = int(pos[int(np.argmin(loads))])   # first-min: earliest
             swept = order[:k]
             ref[swept[occ[swept]]] = False
         elif occ.any():

@@ -100,6 +100,58 @@ def bump(counters: jnp.ndarray, idx: int, n=1) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Stacked pools (multi-expander fabric, repro.fabric): N independent pools as
+# one pytree whose every leaf carries a leading expander axis, advanced in
+# parallel with jax.vmap.
+# ---------------------------------------------------------------------------
+
+def make_pool_stack(cfg: PoolConfig, n_expanders: int, seed: int = 0,
+                    rates_table: jnp.ndarray | None = None) -> Pool:
+    """N identically-configured pools stacked leaf-wise. Every expander gets
+    its own RNG stream derived from ``seed`` (fold_in by expander index), so
+    a fabric run is bit-reproducible from one CLI seed and expanders never
+    share randomness. The OSPA page space (and content model) is the full
+    ``cfg.n_pages`` on every expander — placement decides which pages a
+    given expander ever sees (fabric/placement.py)."""
+    base = make_pool(cfg, seed=seed, rates_table=rates_table)
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_expanders,) + a.shape), base)
+    keys = jax.vmap(lambda e: jax.random.fold_in(
+        jax.random.PRNGKey(seed), e))(jnp.arange(n_expanders))
+    return stacked._replace(rng=keys)
+
+
+def pool_slice(stack: Pool, e: int) -> Pool:
+    """Expander ``e``'s pool out of a stacked state (host-side: spill
+    orchestration, invariant checks)."""
+    return jax.tree_util.tree_map(lambda a: a[e], stack)
+
+
+def pool_unslice(stack: Pool, e: int, pool: Pool) -> Pool:
+    """Write one expander's pool back into the stacked state."""
+    return jax.tree_util.tree_map(lambda s, a: s.at[e].set(a), stack, pool)
+
+
+def stacked_counters(stack: Pool) -> jnp.ndarray:
+    """Summed counters across expanders: int32[NUM_COUNTERS]."""
+    return jnp.sum(stack.counters, axis=0)
+
+
+def stacked_counters_dict(stack: Pool) -> dict:
+    """Aggregate counters of a stacked pool state, same keys as
+    ``counters_dict`` — per-expander traffic sums are the fabric's parity
+    contract with single-pool replay (benchmarks/fabric_bench.py)."""
+    vals = [int(v) for v in stacked_counters(stack)]
+    return dict(zip(COUNTER_NAMES, vals))
+
+
+def per_expander_counters(stack: Pool) -> list:
+    """One ``counters_dict`` per expander, in expander order."""
+    arr = [[int(v) for v in row] for row in stack.counters]
+    return [dict(zip(COUNTER_NAMES, row)) for row in arr]
+
+
+# ---------------------------------------------------------------------------
 # Metrics.
 # ---------------------------------------------------------------------------
 

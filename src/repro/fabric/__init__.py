@@ -1,0 +1,27 @@
+"""Multi-expander pool fabric (DESIGN.md §11).
+
+Runs N independent ``engine.state.Pool``s as one stacked pytree and routes
+OSPA pages to expanders through a pluggable placement layer:
+
+  * ``placement`` — static interleave by page hash, capacity-aware greedy,
+    locality-affinity range partition, weighted interleave (skew studies);
+    all carry a spill-override table;
+  * ``ops``       — cross-expander page migration (the spill path), built
+    from the same §4 mechanism ops as demotion;
+  * ``replay``    — trace partitioning + vmapped replay over the stacked
+    state (reusing ``engine.batch``'s window bodies unchanged), per-expander
+    watermark demotion, and the spill orchestrator.
+"""
+from repro.fabric import ops, placement, replay
+from repro.fabric.ops import spill_pages
+from repro.fabric.placement import (CapacityAware, LocalityAffinity,
+                                    Placement, StaticInterleave,
+                                    WeightedInterleave, make_placement)
+from repro.fabric.replay import Fabric, partition_trace
+
+__all__ = [
+    "ops", "placement", "replay",
+    "Placement", "StaticInterleave", "CapacityAware", "LocalityAffinity",
+    "WeightedInterleave", "make_placement",
+    "Fabric", "partition_trace", "spill_pages",
+]

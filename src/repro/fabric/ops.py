@@ -1,0 +1,108 @@
+"""Cross-expander spill/migration (DESIGN.md §11).
+
+When one expander's freelists run dry while others have headroom, the
+fabric migrates compressed pages from the starved expander to a donor:
+the page's chunks are read on the source (charged as demotion-read
+traffic there), freed, and the page is re-stored on the destination
+(allocation + demotion-write + compression-store bookkeeping charged
+there) — the same §4 mechanism ops demotion uses, so invariants I1–I5
+hold on both expanders after every migration. Only *non-promoted*
+chunk-backed pages are eligible: hot pages stay where their traffic is,
+and zero pages occupy no chunks so moving them frees nothing.
+
+Traffic is charged per expander on the pool the access physically
+touches; fabric-level event counts (pages/bytes moved, spill events)
+live on the host ``Fabric`` object (fabric/replay.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import PoolConfig
+from repro.core import metadata as md
+from repro.core.engine import ops
+from repro.core.engine.policy import Policy
+from repro.core.engine.state import (C_DEMO_RD, C_DEMO_WR, C_META_RD,
+                                     C_META_WR, CTR_DTYPE, Pool, bump)
+
+
+def migrate_page(src: Pool, dst: Pool, cfg: PoolConfig, policy: Policy,
+                 ospn) -> Tuple[Pool, Pool, jnp.ndarray]:
+    """Move one page's compressed copy from ``src`` to ``dst``.
+
+    Eligible pages are valid, non-promoted, and chunk-backed; anything else
+    is a no-op (returns moved=False). The metadata word travels unchanged
+    (rates, sizes, num_chunks, wr_cntr); only the chunk pointers are
+    rewritten for the destination's allocation."""
+    entry = src.meta[ospn]
+    w0 = entry[0]
+    nchunks = md.get_num_chunks(w0).astype(jnp.int32)
+    eligible = (md.get_valid(w0) == 1) & (md.get_promoted(w0) == 0) & \
+        (nchunks > 0)
+
+    def do(carry):
+        s, d = carry
+        # source: read the compressed payload (nchunks * 512B), free the
+        # chunks, invalidate the entry
+        buf = ops._gather_page_buf(s, cfg, entry)
+        moved_units = (nchunks * (cfg.chunk_bytes // 64)).astype(CTR_DTYPE)
+        sc = policy.charge_migration(s.counters, C_DEMO_RD, moved_units)
+        sc = bump(sc, C_META_RD, ops.meta_width(cfg, ospn))
+        s = ops.free_chunks(s._replace(counters=sc), cfg, entry)
+        s = s._replace(meta=s.meta.at[ospn].set(md.empty_entry()),
+                       counters=bump(s.counters, C_META_WR,
+                                     ops.meta_width(cfg, ospn)))
+        # destination: allocate, store, write the travelled metadata word
+        d, ptrs, is_group = ops.alloc_chunks(d, cfg, nchunks)
+        d = ops._scatter_page_buf(d, cfg, buf, ptrs, nchunks, is_group)
+        new_entry = entry
+        for i in range(7):
+            new_entry = md.set_ptr(new_entry, i, jnp.maximum(ptrs[i], 0))
+        dc = policy.charge_migration(d.counters, C_DEMO_WR, moved_units)
+        dc = bump(dc, C_META_WR, ops.meta_width(cfg, ospn))
+        dc = policy.on_compress_store(dc)
+        d = d._replace(meta=d.meta.at[ospn].set(new_entry), counters=dc)
+        return s, d
+
+    src, dst = jax.lax.cond(eligible, do, lambda c: c, (src, dst))
+    return src, dst, eligible
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def spill_pages(src: Pool, dst: Pool, cfg: PoolConfig, policy: Policy,
+                k: int) -> Tuple[Pool, Pool, jnp.ndarray]:
+    """Migrate up to ``k`` eligible pages from ``src`` to ``dst``.
+
+    Candidates are taken in OSPN order (deterministic; the clock engine
+    already provides recency-aware victimization for *demotion* — spill
+    relieves capacity, it does not rank hotness). A migration is skipped
+    when the donor lacks a safe allocation margin (7 singles + 1 group),
+    so spill can never corrupt the donor's freelists. Returns the updated
+    pools plus int32[k] migrated OSPNs, -1-padded — the host pins those
+    pages to the destination in the placement override table."""
+    w0s = src.meta[:, 0]
+    cand = (md.get_valid(w0s) == 1) & (md.get_promoted(w0s) == 0) & \
+        (md.get_num_chunks(w0s) > 0)
+    # stable order: candidate OSPNs first, in page order
+    order = jnp.argsort(~cand).astype(jnp.int32)
+
+    def body(i, carry):
+        s, d, moved = carry
+        ospn = order[i]
+        headroom = (d.cfree.top >= 7) & (d.gfree.top >= 1)
+        ok = cand[ospn] & headroom
+
+        def do(c):
+            s2, d2, m2 = c
+            s2, d2, did = migrate_page(s2, d2, cfg, policy, ospn)
+            m2 = m2.at[i].set(jnp.where(did, ospn, -1))
+            return s2, d2, m2
+
+        return jax.lax.cond(ok, do, lambda c: c, (s, d, moved))
+
+    moved0 = jnp.full((k,), -1, jnp.int32)
+    return jax.lax.fori_loop(0, k, body, (src, dst, moved0))

@@ -1,0 +1,220 @@
+"""Fabric replay: partition traces by expander, advance all expanders in
+parallel with ``vmap`` over the stacked pool state (DESIGN.md §11).
+
+A merged (ospn, is_write, block) trace is split into spill *segments*; each
+segment is partitioned by the placement's current routing (base rule +
+spill overrides), padded per expander to a common window-aligned length,
+and replayed through ``engine.batch._replay_windows_masked`` vmapped over
+the expander axis — the window bodies are the single-pool ones, unchanged,
+so per-expander counters are bit-identical to replaying that expander's
+partition through ``batch.replay_trace`` on a single pool (the fabric's
+parity contract, asserted by tests/test_fabric.py and
+benchmarks/fabric_bench.py). Per-expander watermark demotion runs inside
+each expander's own windows exactly as on a single pool.
+
+Between segments the host performs one freelist-occupancy sync; if an
+expander's compressed-region freelists fall below the spill watermark while
+another has headroom, ``fabric.ops.spill_pages`` migrates compressed pages
+to the most-free donor and the placement override table pins them there.
+
+Padded window counts are bucketed to powers of two so a whole skew sweep
+compiles a handful of shapes per expander count.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import PoolConfig
+from repro.common.utils import next_pow2
+from repro.core.engine import batch as B
+from repro.core.engine import state as S
+from repro.core.engine.policy import Policy
+from repro.fabric import ops as fops
+from repro.fabric.placement import Placement
+
+
+def partition_trace(placement: Placement, ospns, writes, blocks,
+                    window: int) -> Tuple[np.ndarray, ...]:
+    """Route a trace and pack it per expander: [N, n_win, W] arrays plus a
+    validity mask. Each expander's partition keeps the merged trace's
+    relative order and sits as a prefix before the padding, so the masked
+    replay walks full windows, then one partial window, then no-ops — the
+    exact shapes ``batch.replay_trace`` produces on a single pool."""
+    n = placement.n_expanders
+    ospns = np.asarray(ospns, np.int32)
+    writes = np.asarray(writes, bool)
+    blocks = np.asarray(blocks, np.int32)
+    eids = placement.route(ospns)
+    counts = np.bincount(eids, minlength=n)
+    n_win = next_pow2(-(-max(int(counts.max()), 1) // window))
+    L = n_win * window
+    o = np.zeros((n, L), np.int32)
+    w = np.zeros((n, L), bool)
+    b = np.zeros((n, L), np.int32)
+    v = np.zeros((n, L), bool)
+    for e in range(n):
+        sel = eids == e
+        k = int(counts[e])
+        o[e, :k] = ospns[sel]
+        w[e, :k] = writes[sel]
+        b[e, :k] = blocks[sel]
+        v[e, :k] = True
+    shp = (n, n_win, window)
+    return (o.reshape(shp), w.reshape(shp), b.reshape(shp), v.reshape(shp),
+            eids)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _replay_stacked(pools: S.Pool, cfg: PoolConfig, policy: Policy,
+                    ospns, writes, blocks, valid) -> S.Pool:
+    return jax.vmap(
+        lambda p, o, w, b, v: B._replay_windows_masked(p, cfg, policy,
+                                                       o, w, b, v)
+    )(pools, ospns, writes, blocks, valid)
+
+
+class Fabric:
+    """N expanders as one stacked pool state + a placement + spill policy.
+
+    ``spill_low`` is the compressed-region watermark in *chunks* (singles +
+    8x groups): an expander below it is starved; a donor must clear
+    ``2 * spill_low``. ``spill_k`` pages move per event. ``spill_interval``
+    is the segment length between occupancy checks — one host sync each.
+    """
+
+    def __init__(self, cfg: PoolConfig, policy: Policy, placement: Placement,
+                 *, seed: int = 0, rates_table=None, window: Optional[int] = None,
+                 spill: bool = True, spill_interval: int = 2048,
+                 spill_k: int = 16, spill_low: Optional[int] = None):
+        if placement.n_pages != cfg.n_pages:
+            raise ValueError("placement/page-space mismatch")
+        self.cfg = cfg
+        self.policy = policy
+        self.placement = placement
+        self.n_expanders = placement.n_expanders
+        self.window = B.DEFAULT_WINDOW if window is None else window
+        self.spill_enabled = spill and self.n_expanders > 1
+        self.spill_interval = spill_interval
+        self.spill_k = spill_k
+        self.spill_low = (max(16, cfg.n_cchunks // 16)
+                          if spill_low is None else spill_low)
+        self.pools = S.make_pool_stack(cfg, self.n_expanders, seed=seed,
+                                       rates_table=rates_table)
+        n = self.n_expanders
+        self.spill_events = 0
+        self.spill_pages_out = np.zeros((n,), np.int64)
+        self.spill_pages_in = np.zeros((n,), np.int64)
+        self.spill_syncs = 0
+
+    # -- replay --------------------------------------------------------------
+
+    def replay(self, ospns, writes, blocks) -> "Fabric":
+        """Replay a merged trace through all expanders.
+
+        The trace is partitioned ONCE and replayed in window-aligned chunks
+        of ``spill_interval`` accesses per expander, so each expander's
+        window boundaries are exactly those of ``batch.replay_trace`` over
+        its partition — if no spill fires, per-expander counters are
+        bit-identical to single-pool replays of the partitions (the parity
+        contract). When a spill fires, the unconsumed tail of every
+        expander's partition is re-merged and re-partitioned so accesses to
+        migrated pages follow their page to the donor expander."""
+        rem = (np.asarray(ospns, np.int32), np.asarray(writes, bool),
+               np.asarray(blocks, np.int32))
+        while rem is not None and len(rem[0]):
+            o, w, b, v, eids = partition_trace(self.placement, *rem,
+                                               self.window)
+            counts = np.bincount(eids, minlength=self.n_expanders)
+            n_win = o.shape[1]
+            if self.spill_enabled:
+                seg = next_pow2(max(self.spill_interval // self.window, 1))
+                seg = min(seg, n_win)
+            else:
+                seg = n_win
+            rem = None
+            for lo in range(0, n_win, seg):
+                sl = slice(lo, lo + seg)
+                self.pools = _replay_stacked(
+                    self.pools, self.cfg, self.policy,
+                    jnp.asarray(o[:, sl]), jnp.asarray(w[:, sl]),
+                    jnp.asarray(b[:, sl]), jnp.asarray(v[:, sl]))
+                if not self.spill_enabled:
+                    continue
+                fired = self._maybe_spill()
+                more = v[:, lo + seg:].any() if lo + seg < n_win else False
+                if fired and more:
+                    # rebuild the unconsumed per-expander tails in original
+                    # merged-trace order (after re-routing, one expander may
+                    # merge accesses from several old streams — interleaving
+                    # them by trace position keeps its replay order faithful)
+                    done = (lo + seg) * self.window
+                    tails = [np.nonzero(eids == e)[0][done:]
+                             for e in range(self.n_expanders)]
+                    perm = np.argsort(np.concatenate(tails), kind="stable")
+                    rem = tuple(
+                        np.concatenate([
+                            a.reshape(self.n_expanders, -1)[e,
+                                                            done:counts[e]]
+                            for e in range(self.n_expanders)])[perm]
+                        for a in (o, w, b))
+                    break
+        return self
+
+    # -- spill ---------------------------------------------------------------
+
+    def _chunk_headroom(self) -> np.ndarray:
+        """Per-expander free compressed capacity in single-chunk units
+        (one host sync)."""
+        ct, gt = jax.device_get((self.pools.cfree.top, self.pools.gfree.top))
+        self.spill_syncs += 1
+        return np.asarray(ct, np.int64) + 8 * np.asarray(gt, np.int64)
+
+    def _maybe_spill(self) -> bool:
+        """One occupancy check; migrate from each starved expander to the
+        most-free donor. Returns True when any page actually moved."""
+        free = self._chunk_headroom()
+        fired = False
+        for e in np.nonzero(free < self.spill_low)[0]:
+            donor = int(np.argmax(free))
+            if donor == int(e) or free[donor] < 2 * self.spill_low:
+                continue
+            src = S.pool_slice(self.pools, int(e))
+            dst = S.pool_slice(self.pools, donor)
+            src, dst, moved = fops.spill_pages(src, dst, self.cfg,
+                                               self.policy, self.spill_k)
+            moved = np.asarray(jax.device_get(moved))
+            self.spill_syncs += 1
+            moved = moved[moved >= 0]
+            if not len(moved):
+                continue
+            self.pools = S.pool_unslice(self.pools, int(e), src)
+            self.pools = S.pool_unslice(self.pools, donor, dst)
+            self.placement.override(moved, donor)
+            self.spill_events += 1
+            self.spill_pages_out[int(e)] += len(moved)
+            self.spill_pages_in[donor] += len(moved)
+            free[donor] -= 8 * len(moved)   # stay conservative within a pass
+            fired = True
+        return fired
+
+    # -- metrics -------------------------------------------------------------
+
+    def counters(self) -> Dict[str, int]:
+        """Summed traffic counters across expanders."""
+        return S.stacked_counters_dict(self.pools)
+
+    def counters_by_expander(self) -> List[Dict[str, int]]:
+        return S.per_expander_counters(self.pools)
+
+    def spill_stats(self) -> Dict[str, object]:
+        return {
+            "events": self.spill_events,
+            "pages_out": self.spill_pages_out.tolist(),
+            "pages_in": self.spill_pages_in.tolist(),
+            "syncs": self.spill_syncs,
+        }

@@ -1,0 +1,105 @@
+"""Multi-expander fabric launcher: replay a paper workload through a fabric
+of N simulated expanders with a chosen placement mode (DESIGN.md §11).
+
+  PYTHONPATH=src python -m repro.launch.fabric --workload mcf --expanders 4 \
+      --placement interleave --accesses 4096 --seed 0
+
+``--skew`` forces a weighted placement that sends that fraction of pages to
+expander 0 (spill stress); ``--check-parity`` additionally replays every
+expander's partition through the single-pool engine and asserts the summed
+counters match the fabric exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+
+from repro.core.engine import batch as B
+from repro.core.engine import state as S
+from repro.core.engine.policy import POLICIES
+from repro.fabric import Fabric, make_placement
+from repro.simx.engine import TRAFFIC_KEYS, pool_cfg_for
+from repro.simx.trace import WORKLOADS, make_rates_table, make_trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="mcf", choices=sorted(WORKLOADS))
+    ap.add_argument("--scheme", default="ibex", choices=sorted(POLICIES))
+    ap.add_argument("--expanders", type=int, default=4)
+    ap.add_argument("--placement", default="interleave",
+                    choices=("interleave", "capacity", "locality"))
+    ap.add_argument("--skew", type=float, default=0.0,
+                    help="page share forced onto expander 0 (>0 overrides "
+                         "--placement with a weighted interleave)")
+    ap.add_argument("--accesses", type=int, default=4096)
+    ap.add_argument("--pages", type=int, default=512)
+    ap.add_argument("--prom", type=int, default=32,
+                    help="promoted P-chunks per expander")
+    ap.add_argument("--window", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-spill", action="store_true")
+    ap.add_argument("--check-parity", action="store_true")
+    args = ap.parse_args()
+
+    policy = POLICIES[args.scheme]
+    cfg = pool_cfg_for(policy, n_pages=args.pages, n_pchunks=args.prom,
+                       n_cchunks=2 * args.pages * 4)
+    spec = WORKLOADS[args.workload]
+    rates = make_rates_table(spec, args.pages, seed=args.seed)
+    ospn, wr, blk = make_trace(spec, n_accesses=args.accesses,
+                               n_pages=args.pages, seed=args.seed)
+    n = args.expanders
+    if args.skew > 0:
+        rest = (1.0 - args.skew) / max(n - 1, 1)
+        placement = make_placement("weighted", n, args.pages,
+                                   weights=[args.skew] + [rest] * (n - 1))
+    else:
+        placement = make_placement(args.placement, n, args.pages)
+    fab = Fabric(cfg, policy, placement, seed=args.seed,
+                 rates_table=jnp.asarray(rates), window=args.window,
+                 spill=not args.no_spill)
+    t0 = time.time()
+    fab.replay(ospn, wr, blk)
+    dt = time.time() - t0
+    agg = fab.counters()
+    print(f"fabric: {n} expanders, placement="
+          f"{'weighted' if args.skew > 0 else args.placement}, "
+          f"{args.accesses} accesses in {dt:.1f}s "
+          f"({args.accesses / max(dt, 1e-9):,.0f} acc/s, compile included)")
+    per = fab.counters_by_expander()
+    for e, c in enumerate(per):
+        host = c["host_reads"] + c["host_writes"]
+        internal = sum(c[k] for k in TRAFFIC_KEYS)
+        print(f"  expander {e}: host={host} internal={internal} "
+              f"promotions={c['promotions']} "
+              f"demotions={c['demotions_clean'] + c['demotions_dirty']}")
+    print(f"  aggregate: host={agg['host_reads'] + agg['host_writes']} "
+          f"internal={sum(agg[k] for k in TRAFFIC_KEYS)}")
+    print(f"  spill: {fab.spill_stats()}")
+
+    if args.check_parity:
+        eids = placement.route(ospn)
+        if (placement.overrides >= 0).any():
+            print("parity check skipped: spill fired (re-run with "
+                  "--no-spill for the exact contract)")
+            return
+        stack0 = S.make_pool_stack(cfg, n, seed=args.seed,
+                                   rates_table=jnp.asarray(rates))
+        total = {k: 0 for k in S.COUNTER_NAMES}
+        for e in range(n):
+            sel = eids == e
+            ref = B.replay_trace(S.pool_slice(stack0, e), cfg, policy,
+                                 ospn[sel], wr[sel], blk[sel],
+                                 window=args.window)
+            for k, v in S.counters_dict(ref).items():
+                total[k] += v
+        assert fab.counters() == total, "fabric drifted from single-pool"
+        print("parity: summed fabric counters == per-shard single-pool "
+              "replays (exact)")
+
+
+if __name__ == "__main__":
+    main()

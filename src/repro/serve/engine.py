@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.types import ModelConfig, ServeConfig
+from repro.common.utils import next_pow2 as _next_pow2
 from repro.core.compressor import quantize_blocks
 from repro.core.engine.policy import SecondChanceLanes
 from repro.models import decode as D
@@ -87,6 +88,10 @@ class Request:
     # stale. A preempt at pos == shadow_pos moves zero bytes; at
     # pos > shadow_pos it moves only the (pos - shadow_pos)-token suffix.
     shadow_pos: int = 0
+    # fabric: expander whose pool region holds the parked payload/shadow
+    # (-1 = never parked). A resume onto a lane striped to a different
+    # expander moves the payload across the fabric (counted).
+    expander: int = -1
 
 
 # ---------------------------------------------------------------------------
@@ -248,10 +253,6 @@ def _moved_bytes(parked: Dict[str, Any], n_tokens: int, max_len: int) -> int:
     return total
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
-
-
 # ---------------------------------------------------------------------------
 # Shared engine chassis: request/queue/lane bookkeeping, park/restore
 # mechanics, sync counting. Subclasses decide scheduling + decode structure.
@@ -276,7 +277,19 @@ class _EngineBase:
         self.counters = {"promotions": 0, "demotions": 0, "preempt_bytes": 0,
                          "resume_bytes": 0, "steps": 0, "tokens": 0,
                          "step_syncs": 0, "admit_syncs": 0,
-                         "shadow_repreempts": 0, "prefill_batches": 0}
+                         "shadow_repreempts": 0, "prefill_batches": 0,
+                         "cross_expander_resumes": 0}
+        # fabric-aware serving: lanes stripe across the expander pool fabric;
+        # preempted payloads park on (and are charged to) their lane's
+        # expander, and victim selection balances parked load across
+        # expanders (see SecondChanceLanes.select_mask groups)
+        self.n_expanders = max(int(getattr(scfg, "n_expanders", 1)), 1)
+        self.lane_expander = np.arange(self.lanes) % self.n_expanders
+        self.expander_stats = {
+            "parked": np.zeros((self.n_expanders,), np.int64),
+            "preempt_bytes": np.zeros((self.n_expanders,), np.int64),
+            "resume_bytes": np.zeros((self.n_expanders,), np.int64),
+        }
         (self._step_fn, self._prefill_fn, self._demote_fn,
          self._decode_fn) = _compiled_fns(cfg, scfg, max_len)
 
@@ -319,18 +332,32 @@ class _EngineBase:
                 return i
         return None
 
+    def _drop_park(self, req: Request) -> None:
+        """Release a request's parked payload/shadow (done, or baseline
+        resume) and its expander's park slot."""
+        if req.parked is not None and req.expander >= 0:
+            self.expander_stats["parked"][req.expander] -= 1
+        req.parked = None
+
     def _park_lane(self, req: Request, lane: int) -> None:
         """Demote the lane on device (quantize ring -> codes) and park the
-        compressed payload, charging only the suffix not already covered by
-        the request's shadow."""
+        compressed payload on the lane's expander, charging only the suffix
+        not already covered by the request's shadow."""
         covered = req.shadow_pos if req.parked is not None else 0
+        exp = int(self.lane_expander[lane])
+        if req.parked is None or req.expander != exp:
+            if req.parked is not None and req.expander >= 0:
+                self.expander_stats["parked"][req.expander] -= 1
+            self.expander_stats["parked"][exp] += 1
         lane_cache = _lane_slice(self.cache, lane)
         demoted = self._demote_fn(lane_cache, jnp.asarray(req.pos, jnp.int32))
         kept = {k: v for k, v in demoted.items() if k not in HOT_KEYS}
         req.parked = self._fetch(kept, "admit_syncs")
         req.shadow_pos = req.pos
-        self.counters["preempt_bytes"] += _moved_bytes(
-            req.parked, req.pos - covered, self.max_len)
+        req.expander = exp
+        moved = _moved_bytes(req.parked, req.pos - covered, self.max_len)
+        self.counters["preempt_bytes"] += moved
+        self.expander_stats["preempt_bytes"][exp] += moved
 
     def _install_parked(self, req: Request, lane: int) -> None:
         """Promotion: install parked codes into the lane (empty ring, full
@@ -346,8 +373,18 @@ class _EngineBase:
             else:
                 lane_tree[k] = jnp.asarray(req.parked[k])
         self.cache = _lane_install(self.cache, lane, lane_tree)
-        self.counters["resume_bytes"] += _moved_bytes(req.parked, req.pos,
-                                                      self.max_len)
+        moved = _moved_bytes(req.parked, req.pos, self.max_len)
+        self.counters["resume_bytes"] += moved
+        exp = int(self.lane_expander[lane])
+        self.expander_stats["resume_bytes"][exp] += moved
+        if req.expander >= 0 and req.expander != exp:
+            # the parked payload crosses the fabric to the new lane's
+            # expander; the shadow follows it (its prefix stays valid —
+            # append-only KV does not care which expander holds it)
+            self.counters["cross_expander_resumes"] += 1
+            self.expander_stats["parked"][req.expander] -= 1
+            self.expander_stats["parked"][exp] += 1
+            req.expander = exp
         self.counters["promotions"] += 1
         req.lane = lane
         req.state = RUNNING
@@ -419,8 +456,14 @@ class Engine(_EngineBase):
             claimed = {lane for _, lane in fresh + resumed}
             occupied = np.array([r is not None and i not in claimed
                                  for i, r in enumerate(self.lane_req)])
-            victim, new_ref = self._victim_policy.select_mask(occupied,
-                                                              self._ref)
+            # fabric-aware balancing: among sweep candidates prefer the
+            # lane whose expander holds the fewest parked payloads, so
+            # preemptions spread across the expander fabric
+            groups = self.lane_expander if self.n_expanders > 1 else None
+            load = (self.expander_stats["parked"]
+                    if self.n_expanders > 1 else None)
+            victim, new_ref = self._victim_policy.select_mask(
+                occupied, self._ref, groups=groups, group_load=load)
             if victim is not None:
                 self._ref = new_ref
                 self.state = dict(self.state, ref=jnp.asarray(new_ref))
@@ -536,6 +579,6 @@ class Engine(_EngineBase):
             if done_h[lane]:
                 req.state = DONE
                 req.lane = -1
-                req.parked = None          # free the shadow's host memory
+                self._drop_park(req)       # free the shadow's host memory
                 self.lane_req[lane] = None
         return True

@@ -102,7 +102,7 @@ class SerialEngine(_EngineBase):
 
     def _resume(self, req: Request, lane: int) -> None:
         self._install_parked(req, lane)
-        req.parked = None              # no shadow kept: baseline behavior
+        self._drop_park(req)           # no shadow kept: baseline behavior
         req.shadow_pos = 0
         self._ref[lane] = True
 

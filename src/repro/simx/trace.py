@@ -9,6 +9,13 @@ lbm & graphs poorly compressible, mcf/omnetpp highly compressible).
 
 A trace is (ospn[i], is_write[i], block[i]) plus a per-page rates table
 consumed by the payload-less pool (pool.rates_table).
+
+Every generator is a deterministic function of its explicit ``seed`` — the
+same seed the benches take on the CLI (``benchmarks/run.py --seed``) and
+the fabric derives its per-expander RNG streams from
+(``engine.state.make_pool_stack``: ``fold_in(seed, expander)``); fabric
+trace partitioning itself is a pure page-hash (fabric/placement.py). One
+flag therefore reproduces a whole ``BENCH_*.json`` run bit-for-bit.
 """
 from __future__ import annotations
 
