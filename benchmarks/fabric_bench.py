@@ -1,5 +1,5 @@
-"""Multi-expander fabric benchmark: scaling curves + skew sensitivity +
-counter-sum parity (DESIGN.md §11).
+"""Multi-expander fabric benchmark: delivered-time scaling curves + skew
+sensitivity + counter-sum and time-model parity (DESIGN.md §11/§12).
 
   * **scaling** — the same merged trace replayed through fabrics of
     1/2/4/8 expanders (per-expander pool dimensions fixed, so capacity
@@ -7,10 +7,16 @@ counter-sum parity (DESIGN.md §11).
     (steady state, compile excluded — NOTE: under vmap both sides of every
     masked-window branch execute for all expanders, so wall-clock carries
     a documented constant and is NOT the delivered-bandwidth story) and
-    **modeled** accesses/sec: expanders serve in parallel, so modeled time
-    is the *bottleneck* expander's `simx.device.exec_time` over its own
-    traffic — that is the curve that scales with capacity and collapses
-    under skew.
+    **delivered** accesses/sec: expanders serve in parallel, so delivered
+    time is the *bottleneck* expander's vectorized device-model time
+    (`Fabric.delivered_time`, computed inside the vmapped replay) over its
+    own traffic — that is the curve that scales with capacity and
+    collapses under skew.
+  * **mixed fleets** — heterogeneous generations (`simx.time
+    DEVICE_PROFILES`: gen5 default + gen4) under skewed placement with
+    spill LIVE: per-expander delivered seconds price each expander's own
+    traffic — including migration traffic, charged on the expander where
+    it physically occurred — through that expander's own DeviceConfig.
   * **skew** — a 4-expander fabric under WeightedInterleave placement with
     a growing expander-0 page share: delivered rate + per-expander host
     traffic share + spill activity (placement skew, not workload locality,
@@ -21,7 +27,10 @@ counter-sum parity (DESIGN.md §11).
     per-expander partitions EXACTLY (static interleave, no spill). Against
     ONE merged pool with N× regions + N× metadata cache, total internal
     traffic agrees within the documented tolerance (shared-vs-sharded
-    cache and demotion cadence shift counters; see DESIGN.md §11).
+    cache and demotion cadence shift counters; see DESIGN.md §11). The
+    vectorized time model is additionally asserted against the legacy
+    scalar dict path (bitwise, float64) on every expander of every scaling
+    point, and against the in-jit float32 value within 1e-4.
 
 Writes ``BENCH_fabric.json`` at the repo root.
 """
@@ -42,6 +51,7 @@ from repro.core.engine import state as S
 from repro.core.engine.policy import POLICIES
 from repro.fabric import Fabric, StaticInterleave, WeightedInterleave
 from repro.simx import device as DEV
+from repro.simx import time as TM
 from repro.simx.engine import TRAFFIC_KEYS, pool_cfg_for
 from repro.simx.trace import WORKLOADS, make_rates_table, make_trace
 
@@ -53,6 +63,13 @@ SKEWS_Q = (0.5, 0.8)           # expander-0 page share at N=4
 SKEWS_F = (0.25, 0.5, 0.8)
 MERGED_POOL_TOL = 0.35         # documented tolerance vs ONE merged pool
 WL = "mcf"
+
+# mixed-generation fleets (profiles cycle across expanders): the gen4
+# expanders' slower link/channels/engine make them the delivered-time
+# bottleneck even under even placement
+FLEETS_Q = {"mixed2": ("default", "gen4")}
+FLEETS_F = {"mixed2": ("default", "gen4"),
+            "mixed4": ("default", "default", "gen4", "gen4")}
 
 
 def _fabric(cfg, n, rates, seed, window, placement=None, **kw):
@@ -79,20 +96,22 @@ def _internal(c: Dict[str, int]) -> int:
     return sum(c[k] for k in TRAFFIC_KEYS)
 
 
-def _modeled_time(per_expander: List[Dict[str, int]]) -> float:
-    """Delivered time of a fabric serving one trace: expanders run in
-    parallel, so the bottleneck expander's device-model time governs."""
-    times = []
-    for c in per_expander:
-        traffic = {"internal_accesses": _internal(c),
-                   "host_reads": c["host_reads"],
-                   "host_writes": c["host_writes"],
-                   "zero_served": c["zero_served"],
-                   "promotions": c["promotions"],
-                   "demotions_dirty": c["demotions_dirty"],
-                   "recompress_retry": c["recompress_retry"]}
-        times.append(DEV.exec_time(traffic, DEV.DeviceConfig()))
-    return max(times)
+def _delivered(fab: Fabric) -> Dict[str, object]:
+    """Per-expander + bottleneck delivered seconds, with the time-model
+    parity contract asserted: the vectorized float64 path is bitwise what
+    the legacy scalar dict model computes per expander, and the in-jit
+    float32 values (computed inside the vmapped replay) agree to 1e-4."""
+    per = fab.delivered_time()                       # float64, host
+    for e, c in enumerate(fab.counters_by_expander()):
+        legacy = DEV.exec_time(dict(c, internal_accesses=_internal(c)),
+                               fab.devices[e])
+        assert per[e] == legacy, \
+            f"vectorized time drifted from scalar model on expander {e}"
+    in_jit = fab.delivered_time(exact=False)
+    assert np.allclose(per, in_jit, rtol=1e-4), (per, in_jit)
+    return {"per_expander_s": [float(t) for t in per],
+            "bottleneck_s": float(per.max()),
+            "bottleneck_expander": int(per.argmax())}
 
 
 def run(quick: bool, seed: int = 0) -> List[Dict]:
@@ -112,25 +131,75 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                                seed=seed)
     rows = []
 
-    # -- scaling curve -------------------------------------------------------
+    # -- delivered-time scaling curve (homogeneous fleets) -------------------
     scaling: Dict[str, Dict[str, float]] = {}
     for n in SCALES:
         t0 = time.perf_counter()
         acc, fab = _rate(lambda n=n: _fabric(cfg, n, rates, seed, window,
                                              spill=False), ospn, wr, blk,
                          reps)
-        per = fab.counters_by_expander()
-        modeled = n_accesses / _modeled_time(per)
+        d = _delivered(fab)
+        modeled = n_accesses / d["bottleneck_s"]
         scaling[str(n)] = {
             "wallclock_acc_per_sec": acc,
             "modeled_acc_per_sec": modeled,
+            "delivered_time_s": d["bottleneck_s"],
+            "delivered_per_expander_s": d["per_expander_s"],
             "internal_accesses": _internal(fab.counters()),
         }
         rows.append({"name": f"fabric.scale.{n}x",
                      "us": (time.perf_counter() - t0) * 1e6,
                      "derived": f"wall={acc:,.0f}acc/s;"
+                                f"delivered={d['bottleneck_s'] * 1e6:.1f}us;"
                                 f"modeled={modeled:,.0f}acc/s;"
                                 f"internal={_internal(fab.counters())}"})
+
+    # -- mixed-generation fleets (spill live, skewed placement) --------------
+    # the fleet rows shrink the per-expander compressed region so the 0.8
+    # page skew genuinely starves expander 0's freelists and the spill path
+    # fires — the JSON then shows migration traffic charged per expander
+    # (source demo_rd, donor demo_wr) and priced by each expander's own
+    # device generation
+    fleet_cfg = replace(cfg, n_cchunks=256)
+    mixed: Dict[str, Dict[str, object]] = {}
+    for name, profiles in (FLEETS_Q if quick else FLEETS_F).items():
+        n = len(profiles)
+        devices = [TM.DEVICE_PROFILES[p] for p in profiles]
+        share = 0.8
+        restw = (1.0 - share) / max(n - 1, 1)
+        mk = lambda n=n, devices=devices, restw=restw: _fabric(
+            fleet_cfg, n, rates, seed, window,
+            placement=WeightedInterleave(n, n_pages,
+                                         [share] + [restw] * (n - 1)),
+            spill=True, spill_interval=512, spill_k=16, spill_low=112,
+            devices=devices)
+        t0 = time.perf_counter()
+        acc, fab = _rate(mk, ospn, wr, blk, reps)
+        d = _delivered(fab)
+        per = fab.counters_by_expander()
+        assert fab.spill_stats()["events"] > 0, \
+            f"fleet {name}: spill never fired (deterministic config)"
+        mixed[name] = {
+            "profiles": list(profiles),
+            "wallclock_acc_per_sec": acc,
+            "modeled_acc_per_sec": n_accesses / d["bottleneck_s"],
+            "delivered_time_s": d["bottleneck_s"],
+            "delivered_per_expander_s": d["per_expander_s"],
+            "bottleneck_expander": d["bottleneck_expander"],
+            "internal_per_expander": [_internal(c) for c in per],
+            "host_per_expander": [c["host_reads"] + c["host_writes"]
+                                  for c in per],
+            # spill traffic is charged on the expander where it occurs:
+            # demo_rd on the starved source, demo_wr on the donor
+            "spill": fab.spill_stats(),
+            "spill_demo_rd_per_expander": [c["demo_rd"] for c in per],
+            "spill_demo_wr_per_expander": [c["demo_wr"] for c in per],
+        }
+        rows.append({"name": f"fabric.fleet.{name}",
+                     "us": (time.perf_counter() - t0) * 1e6,
+                     "derived": f"delivered={d['bottleneck_s'] * 1e6:.1f}us;"
+                                f"bottleneck=e{d['bottleneck_expander']};"
+                                f"spills={fab.spill_stats()['events']}"})
 
     # -- skew sweep (N=4, spill live) ---------------------------------------
     skew_rows = {}
@@ -145,7 +214,8 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
         acc, fab = _rate(mk, ospn, wr, blk, reps)
         per = fab.counters_by_expander()
         host = [c["host_reads"] + c["host_writes"] for c in per]
-        modeled = n_accesses / _modeled_time(per)
+        d = _delivered(fab)
+        modeled = n_accesses / d["bottleneck_s"]
         pages = np.bincount(fab.placement.assign(np.arange(n_pages)),
                             minlength=4) / n_pages
         # page share is what the placement controls; access share also
@@ -153,6 +223,7 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
         skew_rows[f"{share:.2f}"] = {
             "wallclock_acc_per_sec": acc,
             "modeled_acc_per_sec": modeled,
+            "delivered_time_s": d["bottleneck_s"],
             "page_share": pages.tolist(),
             "host_share": [h / max(sum(host), 1) for h in host],
             "spill": fab.spill_stats(),
@@ -213,14 +284,20 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                  "quick": quick,
                  "unit": "accesses/sec; wallclock = simulator steady state "
                          "(compile excluded; vmapped masked branches carry "
-                         "a constant), modeled = bottleneck expander's "
-                         "device-model time (the delivered-bandwidth "
-                         "curve)"},
+                         "a constant), delivered/modeled = bottleneck "
+                         "expander's vectorized device-model time computed "
+                         "inside the vmapped replay (the delivered-"
+                         "bandwidth curve; per-expander DeviceConfig, "
+                         "spill traffic charged where it occurs)"},
         "scaling": scaling,
+        "mixed_fleets": mixed,
         "skew": skew_rows,
         "parity": {"per_shard_exact": True,
                    "merged_pool_rel_diff": rel,
-                   "merged_pool_tolerance": MERGED_POOL_TOL},
+                   "merged_pool_tolerance": MERGED_POOL_TOL,
+                   "scalar_vs_vectorized_time": "bitwise (asserted per "
+                                                "expander on every scaling/"
+                                                "fleet/skew point)"},
     }
     JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     rows.append({"name": "fabric.json", "us": 0.0,

@@ -18,6 +18,10 @@ Measures three things the tentpole claims:
     baseline drops its parked copy on resume and re-pays the full context),
     and a re-preempt of an untouched resumed request moves exactly 0 bytes
     (checked by driving resume→preempt directly).
+  * **modeled seconds (DESIGN.md §12)** — the byte and sync counters priced
+    through ``simx.time.serve_modeled_time``: serial-vs-batched and a
+    fabric-striped (n_expanders=2) run compare in modeled seconds per
+    decode step, not just simulator tokens/sec.
 
 Writes ``BENCH_serve.json`` at the repo root.
 """
@@ -105,6 +109,17 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
     # host-sync contract: exactly one sync per decode step
     assert be.counters["step_syncs"] == be.counters["steps"], be.counters
 
+    # fabric-striped run (lanes across 2 expanders; compiled programs are
+    # shared with the single-expander engine — n_expanders is scheduling-
+    # only and normalized out of the jit key)
+    import dataclasses
+    scfg2 = dataclasses.replace(scfg, n_expanders=2)
+    fe, dt_f = _serve(Engine, cfg, scfg2, params, prompts, new_tokens,
+                      max_len)
+
+    # modeled seconds: serial vs batched vs fabric-striped in one currency
+    ms, mb, mf = (e.modeled_time() for e in (se, be, fe))
+
     shadow_bytes = _shadow_repreempt_bytes(cfg, scfg, params, prompts,
                                            max_len)
     assert shadow_bytes == 0, shadow_bytes
@@ -128,6 +143,19 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
         "step_syncs_per_step": be.counters["step_syncs"] /
         max(be.counters["steps"], 1),
         "shadow_repreempt_bytes": shadow_bytes,
+        # delivered-time accounting (DESIGN.md §12): one currency (seconds)
+        # across serial / batched / fabric-striped scheduling
+        "modeled": {
+            "unit": "modeled seconds from preempt/resume bytes + host "
+                    "syncs (simx.time.serve_modeled_time)",
+            "serial": ms,
+            "batched": mb,
+            "fabric_striped_2x": dict(mf, per_expander_stats={
+                k: v.tolist() for k, v in fe.expander_stats.items()}),
+            "modeled_speedup_batched_over_serial":
+                ms["modeled_s_per_step"] / max(mb["modeled_s_per_step"],
+                                               1e-18),
+        },
     }
     JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
 
@@ -143,4 +171,9 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                     f"syncs_per_step={payload['step_syncs_per_step']:.0f};"
                     f"shadow_repreempt_bytes={shadow_bytes};"
                     f"json={JSON_PATH.name}"},
+        {"name": "serve.modeled_s_per_step", "us": dt_f * 1e6,
+         "derived": f"serial={ms['modeled_s_per_step'] * 1e6:.2f}us;"
+                    f"batched={mb['modeled_s_per_step'] * 1e6:.2f}us;"
+                    f"striped2x={mf['modeled_s_per_step'] * 1e6:.2f}us;"
+                    f"modeled_x={payload['modeled']['modeled_speedup_batched_over_serial']:.2f}"},
     ]

@@ -48,6 +48,14 @@ COUNTER_NAMES = [
     "recompress_retry",
 ]
 
+# The ten *internal 64B-access* categories (excludes host accesses and event
+# counters) — the canonical definition of "internal traffic" shared by the
+# metrics here, simx.engine.TRAFFIC_KEYS, and the simx.time delivered-time
+# model, so the counter layout and the model can never drift on key names.
+TRAFFIC_IDX = (C_META_RD, C_META_WR, C_DATA_RD, C_DATA_WR, C_PROMO_RD,
+               C_PROMO_WR, C_DEMO_RD, C_DEMO_WR, C_ACT_RD, C_ACT_WR)
+TRAFFIC_NAMES = tuple(COUNTER_NAMES[i] for i in TRAFFIC_IDX)
+
 
 class Pool(NamedTuple):
     meta: jnp.ndarray        # uint32[n_pages, 8]
@@ -174,9 +182,31 @@ def counters_dict(pool: Pool) -> dict:
     return dict(zip(COUNTER_NAMES, vals))
 
 
+def traffic_vector(counters) -> jnp.ndarray:
+    """Internal-traffic view of a counter vector: ``[..., NUM_COUNTERS]`` →
+    ``[..., len(TRAFFIC_IDX)]`` in ``TRAFFIC_IDX`` order. Works on numpy
+    and jnp arrays (inside jit/vmap), with any leading batch/expander axes
+    — the array-native hook the delivered-time model (simx/time.py) and
+    the fabric's per-segment accounting consume."""
+    return counters[..., list(TRAFFIC_IDX)]
+
+
+def counters_snapshot(pool: Pool) -> jnp.ndarray:
+    """A point-in-time counter vector. Pool state is immutable, so the
+    live array IS the snapshot; this names the intent at segment
+    boundaries (fabric per-segment deltas)."""
+    return pool.counters
+
+
+def counters_delta(before: jnp.ndarray, after: jnp.ndarray) -> jnp.ndarray:
+    """Per-segment counter delta between two snapshots (leading axes — e.g.
+    the expander axis of a stacked pool — broadcast through). The hook
+    that per-segment delivered-time accounting, async-migration overlap and
+    traffic-imbalance rebalancing (ROADMAP) are built on."""
+    return after - before
+
+
 def total_traffic(pool: Pool) -> jnp.ndarray:
     """Total internal 64B accesses (excludes host_reads/host_writes and
     event counters)."""
-    idx = jnp.array([C_META_RD, C_META_WR, C_DATA_RD, C_DATA_WR, C_PROMO_RD,
-                     C_PROMO_WR, C_DEMO_RD, C_DEMO_WR, C_ACT_RD, C_ACT_WR])
-    return jnp.sum(pool.counters[idx])
+    return jnp.sum(traffic_vector(pool.counters), axis=-1)

@@ -19,6 +19,15 @@ to the most-free donor and the placement override table pins them there.
 
 Padded window counts are bucketed to powers of two so a whole skew sweep
 compiles a handful of shapes per expander count.
+
+Delivered time (DESIGN.md §12): each fabric carries a stacked
+``simx.time.DeviceLanes`` — per-expander timing parameters, possibly
+mixed-generation — and every replayed segment prices each expander's
+cumulative counters *inside the vmapped replay*; ``Fabric.delivered_time``
+/ ``bottleneck_time`` expose the per-expander and fabric-level seconds the
+benches record. ``track_segments`` records per-segment counter deltas
+(``state.counters_delta``), the hook for async migration overlap and
+traffic-imbalance rebalancing.
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ from repro.core.engine import state as S
 from repro.core.engine.policy import Policy
 from repro.fabric import ops as fops
 from repro.fabric.placement import Placement
+from repro.simx import time as TM
 
 
 def partition_trace(placement: Placement, ospns, writes, blocks,
@@ -71,11 +81,19 @@ def partition_trace(placement: Placement, ospns, writes, blocks,
 
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def _replay_stacked(pools: S.Pool, cfg: PoolConfig, policy: Policy,
-                    ospns, writes, blocks, valid) -> S.Pool:
-    return jax.vmap(
+                    ospns, writes, blocks, valid,
+                    lanes: TM.DeviceLanes):
+    """Advance all expanders one segment AND price their cumulative traffic:
+    ``lanes`` is the stacked per-expander DeviceLanes pytree (mixed
+    generations = different field values per lane), vmapped alongside the
+    pools so each expander's delivered time is computed on device from its
+    own counter vector — no host sync, no dict round-trip."""
+    pools = jax.vmap(
         lambda p, o, w, b, v: B._replay_windows_masked(p, cfg, policy,
                                                        o, w, b, v)
     )(pools, ospns, writes, blocks, valid)
+    times = jax.vmap(TM.exec_time_vec)(pools.counters, lanes)
+    return pools, times
 
 
 class Fabric:
@@ -85,12 +103,24 @@ class Fabric:
     8x groups): an expander below it is starved; a donor must clear
     ``2 * spill_low``. ``spill_k`` pages move per event. ``spill_interval``
     is the segment length between occupancy checks — one host sync each.
+
+    ``devices`` is the expander fleet's timing model: ``None`` (default
+    ``DeviceConfig`` everywhere), one ``DeviceConfig`` (homogeneous), or a
+    sequence — shorter sequences cycle, so ``[gen5, gen4]`` on N=4 makes an
+    alternating mixed-generation fleet. The stacked ``DeviceLanes`` rides
+    into the vmapped replay, so per-expander delivered time (including
+    spill traffic, charged on the expander where it physically occurs) is
+    computed on device every segment. ``track_segments=True`` additionally
+    records per-segment, per-expander counter deltas
+    (``state.counters_delta``) — one extra host sync per segment; the hook
+    async migration and traffic-imbalance rebalancing build on.
     """
 
     def __init__(self, cfg: PoolConfig, policy: Policy, placement: Placement,
                  *, seed: int = 0, rates_table=None, window: Optional[int] = None,
                  spill: bool = True, spill_interval: int = 2048,
-                 spill_k: int = 16, spill_low: Optional[int] = None):
+                 spill_k: int = 16, spill_low: Optional[int] = None,
+                 devices=None, track_segments: bool = False):
         if placement.n_pages != cfg.n_pages:
             raise ValueError("placement/page-space mismatch")
         self.cfg = cfg
@@ -103,6 +133,8 @@ class Fabric:
         self.spill_k = spill_k
         self.spill_low = (max(16, cfg.n_cchunks // 16)
                           if spill_low is None else spill_low)
+        self.devices = TM.resolve_fleet(devices, self.n_expanders)
+        self.lanes = TM.stack_devices(self.devices)
         self.pools = S.make_pool_stack(cfg, self.n_expanders, seed=seed,
                                        rates_table=rates_table)
         n = self.n_expanders
@@ -110,6 +142,13 @@ class Fabric:
         self.spill_pages_out = np.zeros((n,), np.int64)
         self.spill_pages_in = np.zeros((n,), np.int64)
         self.spill_syncs = 0
+        self.track_segments = track_segments
+        # per-segment, per-expander counter deltas (int64 [N, NUM_COUNTERS]
+        # each) when track_segments; delivered time per expander (device
+        # float32 [N]) refreshed by every replayed segment
+        self.segment_deltas: List[np.ndarray] = []
+        self.segment_syncs = 0
+        self._modeled_times = None
 
     # -- replay --------------------------------------------------------------
 
@@ -139,10 +178,18 @@ class Fabric:
             rem = None
             for lo in range(0, n_win, seg):
                 sl = slice(lo, lo + seg)
-                self.pools = _replay_stacked(
+                before = S.counters_snapshot(self.pools)
+                self.pools, self._modeled_times = _replay_stacked(
                     self.pools, self.cfg, self.policy,
                     jnp.asarray(o[:, sl]), jnp.asarray(w[:, sl]),
-                    jnp.asarray(b[:, sl]), jnp.asarray(v[:, sl]))
+                    jnp.asarray(b[:, sl]), jnp.asarray(v[:, sl]),
+                    self.lanes)
+                if self.track_segments:
+                    delta = S.counters_delta(before,
+                                             S.counters_snapshot(self.pools))
+                    self.segment_deltas.append(
+                        np.asarray(jax.device_get(delta), np.int64))
+                    self.segment_syncs += 1
                 if not self.spill_enabled:
                     continue
                 fired = self._maybe_spill()
@@ -176,7 +223,12 @@ class Fabric:
 
     def _maybe_spill(self) -> bool:
         """One occupancy check; migrate from each starved expander to the
-        most-free donor. Returns True when any page actually moved."""
+        most-free donor. Returns True when any page actually moved.
+
+        A spill charges migration traffic to the pool counters AFTER the
+        segment's in-jit delivered times were computed, so those go stale;
+        they are invalidated here and either refreshed by the next segment
+        or recomputed host-side by ``delivered_time``."""
         free = self._chunk_headroom()
         fired = False
         for e in np.nonzero(free < self.spill_low)[0]:
@@ -195,6 +247,7 @@ class Fabric:
             self.pools = S.pool_unslice(self.pools, int(e), src)
             self.pools = S.pool_unslice(self.pools, donor, dst)
             self.placement.override(moved, donor)
+            self._modeled_times = None     # spill traffic not yet priced
             self.spill_events += 1
             self.spill_pages_out[int(e)] += len(moved)
             self.spill_pages_in[donor] += len(moved)
@@ -207,6 +260,35 @@ class Fabric:
     def counters(self) -> Dict[str, int]:
         """Summed traffic counters across expanders."""
         return S.stacked_counters_dict(self.pools)
+
+    def delivered_time(self, exact: bool = True) -> np.ndarray:
+        """Per-expander delivered seconds for the traffic replayed so far,
+        each priced by that expander's own ``DeviceConfig`` — spill traffic
+        included on the expander where it physically occurred (the source's
+        demotion-reads, the donor's writes + compression stores land in
+        those pools' counters).
+
+        ``exact=True`` (default, host-side) recomputes in float64 through
+        the same ``exec_time_vec`` — the parity-grade numbers benches
+        record. ``exact=False`` returns the float32 values the vmapped
+        replay computed on device (zero extra device work; one fetch) —
+        or, when a trailing spill invalidated them, re-prices the current
+        counters through the same float32 device path, never the float64
+        one (the float32-vs-float64 parity asserts stay meaningful)."""
+        if not exact:
+            times = self._modeled_times
+            if times is None:
+                times = TM.exec_time_vec(self.pools.counters, self.lanes)
+            return np.asarray(jax.device_get(times), np.float64)
+        counters = np.asarray(jax.device_get(self.pools.counters),
+                              np.float64)
+        return TM.exec_time_vec(counters, TM.stack_devices(self.devices,
+                                                           xp=np))
+
+    def bottleneck_time(self, exact: bool = True) -> float:
+        """Delivered time of the fabric serving one merged trace: expanders
+        run in parallel, so the bottleneck expander governs."""
+        return float(np.max(self.delivered_time(exact=exact)))
 
     def counters_by_expander(self) -> List[Dict[str, int]]:
         return S.per_expander_counters(self.pools)

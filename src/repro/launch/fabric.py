@@ -20,6 +20,7 @@ from repro.core.engine import batch as B
 from repro.core.engine import state as S
 from repro.core.engine.policy import POLICIES
 from repro.fabric import Fabric, make_placement
+from repro.simx import time as TM
 from repro.simx.engine import TRAFFIC_KEYS, pool_cfg_for
 from repro.simx.trace import WORKLOADS, make_rates_table, make_trace
 
@@ -42,7 +43,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-spill", action="store_true")
     ap.add_argument("--check-parity", action="store_true")
+    ap.add_argument("--device-profile", default="default",
+                    help="comma-separated simx.time.DEVICE_PROFILES names "
+                         f"({', '.join(sorted(TM.DEVICE_PROFILES))}), "
+                         "cycled across expanders — e.g. 'default,gen4' "
+                         "makes an alternating mixed-generation fleet")
     args = ap.parse_args()
+
+    profiles = [p.strip() for p in args.device_profile.split(",") if p.strip()]
+    unknown = [p for p in profiles if p not in TM.DEVICE_PROFILES]
+    if unknown:
+        ap.error(f"unknown device profile(s) {unknown}; choose from "
+                 f"{sorted(TM.DEVICE_PROFILES)}")
+    if len(profiles) > args.expanders:
+        ap.error(f"{len(profiles)} device profiles for "
+                 f"{args.expanders} expanders")
+    devices = [TM.DEVICE_PROFILES[p] for p in profiles]
 
     policy = POLICIES[args.scheme]
     cfg = pool_cfg_for(policy, n_pages=args.pages, n_pchunks=args.prom,
@@ -60,24 +76,32 @@ def main() -> None:
         placement = make_placement(args.placement, n, args.pages)
     fab = Fabric(cfg, policy, placement, seed=args.seed,
                  rates_table=jnp.asarray(rates), window=args.window,
-                 spill=not args.no_spill)
+                 spill=not args.no_spill, devices=devices)
     t0 = time.time()
     fab.replay(ospn, wr, blk)
     dt = time.time() - t0
     agg = fab.counters()
     print(f"fabric: {n} expanders, placement="
           f"{'weighted' if args.skew > 0 else args.placement}, "
+          f"profiles={','.join(profiles)}, "
           f"{args.accesses} accesses in {dt:.1f}s "
           f"({args.accesses / max(dt, 1e-9):,.0f} acc/s, compile included)")
     per = fab.counters_by_expander()
+    delivered = fab.delivered_time()
     for e, c in enumerate(per):
         host = c["host_reads"] + c["host_writes"]
         internal = sum(c[k] for k in TRAFFIC_KEYS)
-        print(f"  expander {e}: host={host} internal={internal} "
+        print(f"  expander {e} ({profiles[e % len(profiles)]}): "
+              f"host={host} internal={internal} "
               f"promotions={c['promotions']} "
-              f"demotions={c['demotions_clean'] + c['demotions_dirty']}")
+              f"demotions={c['demotions_clean'] + c['demotions_dirty']} "
+              f"delivered={delivered[e] * 1e6:.1f}us")
     print(f"  aggregate: host={agg['host_reads'] + agg['host_writes']} "
           f"internal={sum(agg[k] for k in TRAFFIC_KEYS)}")
+    bottleneck = float(delivered.max())
+    print(f"  delivered time (bottleneck expander "
+          f"{int(delivered.argmax())}): {bottleneck * 1e6:.1f}us "
+          f"({args.accesses / bottleneck:,.0f} modeled acc/s)")
     print(f"  spill: {fab.spill_stats()}")
 
     if args.check_parity:

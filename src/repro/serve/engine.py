@@ -51,6 +51,7 @@ benchmark baseline; both engines share ``_EngineBase``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -290,8 +291,12 @@ class _EngineBase:
             "preempt_bytes": np.zeros((self.n_expanders,), np.int64),
             "resume_bytes": np.zeros((self.n_expanders,), np.int64),
         }
+        # n_expanders is scheduling-only (never read by the jitted model
+        # code): normalize it out of the compile key so a fabric-striped
+        # engine shares compiled programs with the single-expander one
         (self._step_fn, self._prefill_fn, self._demote_fn,
-         self._decode_fn) = _compiled_fns(cfg, scfg, max_len)
+         self._decode_fn) = _compiled_fns(
+            cfg, dataclasses.replace(scfg, n_expanders=1), max_len)
 
     # -- client API ---------------------------------------------------------
 
@@ -323,6 +328,21 @@ class _EngineBase:
         blocking sync, counted per path (step vs admission)."""
         self.counters[kind] += 1
         return jax.device_get(tree)
+
+    # -- delivered-time accounting (DESIGN.md §12) ---------------------------
+
+    def modeled_time(self, devices=None) -> Dict[str, Any]:
+        """Convert the engine's preempt/resume byte and host-sync counters
+        into modeled seconds (simx.time.serve_modeled_time): per-expander
+        payload motion priced by each expander's own DeviceConfig
+        (bottleneck across the fabric stripe), plus one CXL round trip per
+        host sync. ``modeled_s_per_step`` is the figure of merit —
+        serial-vs-batched and fabric-striped serving compare in seconds,
+        not just tokens/sec."""
+        from repro.simx import time as TM
+        devs = TM.resolve_fleet(devices, self.n_expanders)
+        return TM.serve_modeled_time(self.counters, self.expander_stats,
+                                     devs)
 
     # -- shared mechanics ---------------------------------------------------
 

@@ -1,70 +1,30 @@
-"""CXL-device timing model (Table 1) converting traffic counters to time.
+"""Legacy scalar face of the CXL-device timing model.
 
-Approximation (documented, not cycle-accurate): execution time is the max of
-four saturable resources, plus a latency term moderated by memory-level
-parallelism —
-
-  t_mem    = internal 64B accesses x 64 / (channels x DDR bw)
-  t_cxl    = host accesses x 64 / CXL bw                (PCIe5 x8 = 32 GB/s)
-  t_engine = compressions x 256cyc + decompressions x 64cyc at 2 GHz
-             (4B/clk compress, 16B/clk decompress for 1KB blocks, §5)
-  t_lat    = host accesses x avg service latency / MLP
-
-The model is used for *relative* performance (Fig. 9/12/14/15/16 analogues);
-traffic counts (Fig. 11/13) need no model at all.
+The model itself lives in ``repro.simx.time`` (DESIGN.md §12): a frozen
+``DeviceConfig`` plus a vectorized ``exec_time_vec`` over counter arrays in
+``engine.state.COUNTER_NAMES`` order, usable inside jit/vmap (the fabric's
+per-expander delivered time) and on host float64 arrays (sweeps, parity).
+This module keeps the original string-keyed-dict API as a thin shim —
+``exec_time(traffic_dict, dev)`` is bitwise-identical to the pre-refactor
+scalar model (tests/test_time_model.py pins the parity contract).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict
 
-
-@dataclass(frozen=True)
-class DeviceConfig:
-    channels: int = 2
-    ch_bw: float = 44.8e9          # DDR5-5600 bytes/s per channel
-    cxl_bw: float = 32e9           # PCIe Gen5 x8
-    cxl_lat: float = 70e-9         # round-trip (Table 1)
-    dram_lat: float = 55e-9        # tCL+tRCD-ish
-    clock: float = 2.0e9
-    comp_cycles: int = 256         # per 1KB block (4B/clk)
-    decomp_cycles: int = 64        # per 1KB block (16B/clk)
-    mlp: float = 4.0               # outstanding-request parallelism
-    block_scale: float = 1.0       # 4KB-block schemes: 4x engine latency
-
-
-def ideal_bandwidth(dev: DeviceConfig) -> DeviceConfig:
-    """Fig. 1's 'unlimited internal bandwidth but same latency' variant."""
-    return DeviceConfig(channels=dev.channels, ch_bw=1e15, cxl_bw=dev.cxl_bw,
-                        cxl_lat=dev.cxl_lat, dram_lat=dev.dram_lat,
-                        clock=dev.clock, comp_cycles=dev.comp_cycles,
-                        decomp_cycles=dev.decomp_cycles, mlp=dev.mlp,
-                        block_scale=dev.block_scale)
+from repro.simx.time import (DEVICE_PROFILES, DeviceConfig,  # noqa: F401
+                             DeviceLanes, exec_time_dict, ideal_bandwidth,
+                             stack_devices)
+from repro.simx.time import uncompressed_time as _uncompressed_time
 
 
 def exec_time(traffic: Dict[str, float], dev: DeviceConfig) -> float:
-    host = traffic["host_reads"] + traffic["host_writes"]
-    internal = traffic["internal_accesses"]
-    t_mem = internal * 64 / (dev.channels * dev.ch_bw)
-    t_cxl = host * 64 / dev.cxl_bw
-    n_comp = (traffic.get("demotions_dirty", 0)
-              + traffic.get("recompress_retry", 0)) * dev.block_scale * 4
-    n_decomp = traffic.get("promotions", 0) * dev.block_scale  # per block
-    t_engine = (n_comp * dev.comp_cycles + n_decomp * dev.decomp_cycles) \
-        / dev.clock
-    # average service latency per host access
-    zero_frac = traffic.get("zero_served", 0) / max(host, 1)
-    accesses_per_host = internal / max(host, 1)
-    decomp_lat_frac = traffic.get("promotions", 0) / max(host, 1)
-    l_avg = dev.cxl_lat + (1 - zero_frac) * dev.dram_lat \
-        + accesses_per_host * dev.dram_lat * 0.25 \
-        + decomp_lat_frac * dev.decomp_cycles / dev.clock
-    t_lat = host * l_avg / dev.mlp
-    return max(t_mem, t_cxl, t_engine, t_lat)
+    """Scalar delivered time of a string-keyed traffic dict (legacy API)."""
+    return exec_time_dict(traffic, dev)
 
 
 def uncompressed_time(n_host: int, dev: DeviceConfig) -> float:
-    traffic = {"host_reads": n_host, "host_writes": 0,
-               "internal_accesses": n_host, "zero_served": 0,
-               "promotions": 0, "demotions_dirty": 0}
-    return exec_time(traffic, dev)
+    """Uncompressed-device baseline; traffic derived from
+    ``state.COUNTER_NAMES`` (zeros except host reads + one internal access
+    each) so the baseline and the model share one key set."""
+    return _uncompressed_time(n_host, dev)

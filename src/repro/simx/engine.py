@@ -27,14 +27,15 @@ from repro.core.engine import batch as B
 from repro.core.engine import state as S
 from repro.core.engine.policy import POLICIES, Policy
 from repro.simx import device as DEV
+from repro.simx import time as TM
 from repro.simx.trace import WorkloadSpec, make_rates_table, make_trace
 
 # name -> Policy; the per-scheme behavior lives in repro.core.engine.policy
 SCHEMES: Dict[str, Policy] = POLICIES
 
-TRAFFIC_KEYS = ("metadata_rd", "metadata_wr", "data_rd", "data_wr",
-                "promo_rd", "promo_wr", "demo_rd", "demo_wr",
-                "activity_rd", "activity_wr")
+# the ten internal-traffic categories, derived from the counter layout so
+# the metrics dicts and the delivered-time model share one key set
+TRAFFIC_KEYS = S.TRAFFIC_NAMES
 
 DEFAULT_WINDOW = B.DEFAULT_WINDOW
 
@@ -106,7 +107,9 @@ def run_workload(scheme_name: str, spec: WorkloadSpec, *,
 def _finalize(c: Dict[str, int], dev: DEV.DeviceConfig, ratio: float
               ) -> Dict[str, float]:
     """Assemble the metrics dict. All scheme-specific traffic was already
-    counted in place by policy hooks — nothing is adjusted here."""
+    counted in place by policy hooks — nothing is adjusted here. Time comes
+    from the vectorized model over the counter vector (float64 host path —
+    bitwise what the legacy dict shim computes)."""
     t = {k: float(c[k]) for k in TRAFFIC_KEYS}
     internal = sum(t.values())
     traffic = dict(t, internal_accesses=internal,
@@ -120,8 +123,8 @@ def _finalize(c: Dict[str, int], dev: DEV.DeviceConfig, ratio: float
                    mcache_hits=c["mcache_hits"],
                    mcache_misses=c["mcache_misses"])
     host = c["host_reads"] + c["host_writes"]
-    time_s = DEV.exec_time(traffic, dev)
-    base_s = DEV.uncompressed_time(host, dev)
+    time_s = float(TM.exec_time_vec(TM.counters_from_dict(traffic), dev))
+    base_s = TM.uncompressed_time(host, dev)
     return dict(traffic, time_s=time_s, uncompressed_s=base_s,
                 normalized_perf=base_s / time_s, compression_ratio=ratio)
 
@@ -165,7 +168,7 @@ def _run_compresso(spec: WorkloadSpec, rates: np.ndarray, ospn: np.ndarray,
                    host_writes=writes, zero_served=0, promotions=0,
                    demotions_clean=0, demotions_dirty=0, recompress_retry=0,
                    random_fallback=0, mcache_hits=hits, mcache_misses=misses)
-    time_s = DEV.exec_time(traffic, dev)
-    base_s = DEV.uncompressed_time(n, dev)
+    time_s = float(TM.exec_time_vec(TM.counters_from_dict(traffic), dev))
+    base_s = TM.uncompressed_time(n, dev)
     return dict(traffic, time_s=time_s, uncompressed_s=base_s,
                 normalized_perf=base_s / time_s, compression_ratio=ratio)

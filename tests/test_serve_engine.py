@@ -202,3 +202,37 @@ def test_batched_engine_matches_serial_engine(params):
     # the same honest byte unit (compressed payload per parked token)
     assert se.counters["demotions"] >= 1 and be.counters["demotions"] >= 1
     assert be.counters["step_syncs"] == be.counters["steps"]
+
+
+def test_modeled_time_prices_motion_and_syncs(params):
+    """Delivered-time accounting (DESIGN.md §12): the engine converts its
+    preempt/resume byte and host-sync counters into modeled seconds —
+    per-expander on a fabric-striped config, reconciling with the
+    expander_stats byte totals, and monotone in the demotion traffic."""
+    import dataclasses
+    from repro.simx import time as TM
+
+    eng = Engine(CFG, dataclasses.replace(SCFG, n_expanders=2), params,
+                 max_len=128)
+    rids = [eng.submit(_prompt(i), max_new_tokens=6) for i in range(5)]
+    eng.run_until_done(max_steps=400)
+    assert all(eng.requests[r].state == DONE for r in rids)
+    assert eng.counters["demotions"] >= 1
+
+    m = eng.modeled_time()
+    assert len(m["motion_s_per_expander"]) == 2
+    assert m["modeled_s"] > 0 and m["modeled_s_per_step"] > 0
+    assert m["modeled_s"] == pytest.approx(
+        m["sync_s"] + max(m["motion_s_per_expander"]))
+    # sync term: one CXL round trip per host sync
+    syncs = eng.counters["step_syncs"] + eng.counters["admit_syncs"]
+    assert m["sync_s"] == pytest.approx(syncs * TM.DeviceConfig().cxl_lat)
+    # motion term reconciles with the per-expander byte stats
+    recomputed = TM.serve_motion_time(
+        np.asarray(eng.expander_stats["preempt_bytes"], np.float64),
+        np.asarray(eng.expander_stats["resume_bytes"], np.float64),
+        TM.stack_devices([TM.DeviceConfig()] * 2, xp=np))
+    assert list(recomputed) == m["motion_s_per_expander"]
+    # a slower fleet can only cost more
+    m_gen4 = eng.modeled_time(devices=TM.DEVICE_PROFILES["gen4"])
+    assert m_gen4["modeled_s"] >= m["modeled_s"]
