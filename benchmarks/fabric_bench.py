@@ -21,6 +21,22 @@ sensitivity + counter-sum and time-model parity (DESIGN.md §11/§12).
     a growing expander-0 page share: delivered rate + per-expander host
     traffic share + spill activity (placement skew, not workload locality,
     is the lever that kills delivered bandwidth on real multi-device CXL).
+  * **migration pipeline** — the skew-0.8 4-expander point under the
+    ``rebalance`` MigrationPolicy, replayed through the overlapped
+    segment scheduler (pipeline depth 2) AND the synchronous reference
+    driver: per-segment pipeline pricing (``simx.time
+    pipeline_delivered_time``) records sync-vs-overlapped delivered time,
+    with overlapped <= sync ASSERTED on the overlapped run's own deltas
+    (max <= sum per segment) — and the depth-1 degenerate pipeline is
+    asserted BIT-IDENTICAL (pools + counters + overrides) to the
+    synchronous driver.
+  * **host-sync contract (asserted on every fabric run)** — mirroring
+    serve's ``step_syncs == steps``: exactly one host sync per replayed
+    segment (the fused stats fetch) and one per committed migration epoch
+    (the moved-pages fetch); ``segment_syncs == segments`` and
+    ``epoch_syncs == epochs`` are checked machine-side on every
+    scaling/fleet/skew/migration point, so the "one sync per pipeline
+    stage" claim is enforced, not narrated.
   * **parity (asserted)** — an N=1 fabric is counter-for-counter identical
     to ``batch.replay_trace`` on one pool, and an N=2 fabric's summed
     counters equal the sum of single-pool replays of the merged trace's
@@ -96,6 +112,15 @@ def _internal(c: Dict[str, int]) -> int:
     return sum(c[k] for k in TRAFFIC_KEYS)
 
 
+def _sync_contract(fab: Fabric) -> Dict[str, int]:
+    """Assert (and record) the segment scheduler's host-sync contract:
+    one sync per replayed segment, one per committed migration epoch."""
+    ss = fab.sync_stats()
+    assert ss["segment_syncs"] == ss["segments"], ss
+    assert ss["epoch_syncs"] == ss["epochs"], ss
+    return ss
+
+
 def _delivered(fab: Fabric) -> Dict[str, object]:
     """Per-expander + bottleneck delivered seconds, with the time-model
     parity contract asserted: the vectorized float64 path is bitwise what
@@ -146,6 +171,7 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
             "delivered_time_s": d["bottleneck_s"],
             "delivered_per_expander_s": d["per_expander_s"],
             "internal_accesses": _internal(fab.counters()),
+            "sync": _sync_contract(fab),
         }
         rows.append({"name": f"fabric.scale.{n}x",
                      "us": (time.perf_counter() - t0) * 1e6,
@@ -194,6 +220,7 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
             "spill": fab.spill_stats(),
             "spill_demo_rd_per_expander": [c["demo_rd"] for c in per],
             "spill_demo_wr_per_expander": [c["demo_wr"] for c in per],
+            "sync": _sync_contract(fab),
         }
         rows.append({"name": f"fabric.fleet.{name}",
                      "us": (time.perf_counter() - t0) * 1e6,
@@ -227,6 +254,7 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
             "page_share": pages.tolist(),
             "host_share": [h / max(sum(host), 1) for h in host],
             "spill": fab.spill_stats(),
+            "sync": _sync_contract(fab),
         }
         rows.append({"name": f"fabric.skew.{share:.2f}",
                      "us": (time.perf_counter() - t0) * 1e6,
@@ -234,6 +262,73 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                                 f"e0_pages={pages[0]:.2f};"
                                 f"e0_host={host[0] / max(sum(host), 1):.2f};"
                                 f"spills={fab.spill_stats()['events']}"})
+
+    # -- sync-vs-overlapped migration pipeline (skew 0.8, N=4, rebalance) ----
+    # the acceptance point: the overlapped segment scheduler's pipeline
+    # pricing (max(replay, migration) per segment) against the synchronous
+    # reference (replay + migration). overlapped <= sync is asserted on the
+    # overlapped run's OWN deltas (mathematically max <= sum, so a violation
+    # means the accounting broke); the depth-1 degenerate pipeline must be
+    # bit-identical to the synchronous driver (pools + counters + overrides)
+    mig_share = 0.8
+    mig_rest = (1.0 - mig_share) / 3.0
+
+    def mk_mig(**kw):
+        return _fabric(cfg, 4, rates, seed, window,
+                       placement=WeightedInterleave(
+                           4, n_pages, [mig_share] + [mig_rest] * 3),
+                       migration="rebalance", spill_interval=1024, **kw)
+
+    t0 = time.perf_counter()
+    fab_over = mk_mig(pipeline_depth=2)
+    fab_over.replay(ospn, wr, blk)
+    pt_over = fab_over.pipeline_times()
+    _sync_contract(fab_over)
+    fab_sync = mk_mig(sync_migration=True)
+    fab_sync.replay(ospn, wr, blk)
+    pt_sync = fab_sync.pipeline_times()
+    _sync_contract(fab_sync)
+    over_s = float(np.max(pt_over["overlapped_s"]))
+    over_sync_s = float(np.max(pt_over["sync_s"]))
+    sync_s = float(np.max(pt_sync["sync_s"]))
+    assert (pt_over["overlapped_s"] <= pt_over["sync_s"] + 1e-15).all(), \
+        "overlapped pricing exceeded sync pricing on the same deltas"
+    _delivered(fab_over)     # per-expander counter/time parity, asserted
+
+    fab_d1 = mk_mig(pipeline_depth=1)
+    fab_d1.replay(ospn, wr, blk)
+    fab_ref = mk_mig(sync_migration=True)
+    fab_ref.replay(ospn, wr, blk)
+    identical = fab_d1.state_identical(fab_ref)
+    assert identical, "depth-1 pipeline drifted from the synchronous driver"
+
+    migration = {
+        "placement": f"weighted {mig_share:.2f} skew, 4 expanders",
+        "policy": "rebalance",
+        # the apples-to-apples pair (same run, same deltas, two pricings;
+        # overlapped <= sync asserted): what the pipeline hides
+        "overlapped_s": over_s,
+        "sync_s": over_sync_s,
+        "overlap_hidden_s": over_sync_s - over_s,
+        # a separate run through the synchronous driver (its own migration
+        # timing, so its counters differ slightly — informational)
+        "sync_reference_run_s": sync_s,
+        "overlapped_per_expander_s": [float(t)
+                                      for t in pt_over["overlapped_s"]],
+        "sync_per_expander_s": [float(t) for t in pt_over["sync_s"]],
+        "epochs_overlapped": fab_over.epochs_applied,
+        "epochs_sync": fab_sync.epochs_applied,
+        "pages_moved_overlapped": int(fab_over.spill_pages_out.sum()),
+        "sync_contract": _sync_contract(fab_over),
+        "depth1_bit_identical_to_sync": bool(identical),
+    }
+    rows.append({"name": "fabric.migration.overlap",
+                 "us": (time.perf_counter() - t0) * 1e6,
+                 "derived": f"overlapped={over_s * 1e6:.1f}us;"
+                            f"sync={over_sync_s * 1e6:.1f}us;"
+                            f"hidden={(over_sync_s - over_s) * 1e6:.2f}us;"
+                            f"epochs={fab_over.epochs_applied};"
+                            f"depth1=bit-identical"})
 
     # -- parity (asserted) ---------------------------------------------------
     fab1 = _fabric(cfg, 1, rates, seed, window, spill=False)
@@ -292,6 +387,7 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
         "scaling": scaling,
         "mixed_fleets": mixed,
         "skew": skew_rows,
+        "migration": migration,
         "parity": {"per_shard_exact": True,
                    "merged_pool_rel_diff": rel,
                    "merged_pool_tolerance": MERGED_POOL_TOL,

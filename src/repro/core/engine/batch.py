@@ -289,7 +289,8 @@ def _replay_serial(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
 
 
 def _replay_windows_masked(pool: Pool, cfg: PoolConfig, policy: Policy,
-                           ospns, writes, blocks, valid) -> Pool:
+                           ospns, writes, blocks, valid,
+                           pending=None) -> Pool:
     """Window scan over a *padded* trace: the multi-expander fabric's entry
     point (fabric/replay.py vmaps it over a stacked pool state).
 
@@ -308,9 +309,20 @@ def _replay_windows_masked(pool: Pool, cfg: PoolConfig, policy: Policy,
     real prefix (asserted by tests/test_fabric.py). Under `vmap` the
     three-way branch lowers to selects, so every expander pays the heavier
     body's cost; fabric throughput numbers carry that constant honestly
-    (benchmarks/fabric_bench.py)."""
+    (benchmarks/fabric_bench.py).
+
+    ``pending`` is the fabric scheduler's carried pending-migration mask
+    (bool[n_pages], shared across expanders): accesses to pages whose
+    migration plan is in flight are masked to exact no-ops mid-segment —
+    the host defers and replays them after the epoch commits, routed to
+    the page's final home — so an in-flight page is never touched by a
+    replay racing its own migration. An all-False mask reduces to
+    ``valid`` unchanged (identical numerics to ``pending=None``: the
+    fabric's parity contract survives the overlap machinery)."""
     def scan_step(p, xs):
         o, w, b, v = xs
+        if pending is not None:
+            v = v & ~pending[o]
 
         def none_valid(q: Pool) -> Pool:
             return q

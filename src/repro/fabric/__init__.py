@@ -1,27 +1,38 @@
-"""Multi-expander pool fabric (DESIGN.md §11).
+"""Multi-expander pool fabric (DESIGN.md §11/§13).
 
 Runs N independent ``engine.state.Pool``s as one stacked pytree and routes
 OSPA pages to expanders through a pluggable placement layer:
 
   * ``placement`` — static interleave by page hash, capacity-aware greedy,
     locality-affinity range partition, weighted interleave (skew studies);
-    all carry a spill-override table;
-  * ``ops``       — cross-expander page migration (the spill path), built
-    from the same §4 mechanism ops as demotion;
-  * ``replay``    — trace partitioning + vmapped replay over the stacked
-    state (reusing ``engine.batch``'s window bodies unchanged), per-expander
-    watermark demotion, and the spill orchestrator.
+    all carry a migration-override table with a batched epoch-apply API;
+  * ``ops``       — cross-expander page migration mechanism: in-jit
+    per-segment stats (headroom / eligibility / referenced bits) and the
+    batched epoch apply, built from the same §4 mechanism ops as demotion;
+  * ``migration`` — the MigrationPolicy layer (mirrors
+    ``core/engine/policy.Policy``): freelist-pressure spill,
+    traffic-imbalance rebalancing, off;
+  * ``replay``    — the segment scheduler: trace partitioning + vmapped
+    replay over the stacked state (reusing ``engine.batch``'s window
+    bodies unchanged), double-buffered overlapped migration with a
+    carried pending-page mask, and the synchronous reference driver.
 """
-from repro.fabric import ops, placement, replay
-from repro.fabric.ops import spill_pages
+from repro.fabric import migration, ops, placement, replay
+from repro.fabric.migration import (MigrationPlan, MigrationPolicy,
+                                    NoMigration, SegmentView, SpillPressure,
+                                    TrafficRebalance, make_migration_policy)
+from repro.fabric.ops import apply_migrations, segment_stats, spill_pages
 from repro.fabric.placement import (CapacityAware, LocalityAffinity,
                                     Placement, StaticInterleave,
                                     WeightedInterleave, make_placement)
 from repro.fabric.replay import Fabric, partition_trace
 
 __all__ = [
-    "ops", "placement", "replay",
+    "migration", "ops", "placement", "replay",
     "Placement", "StaticInterleave", "CapacityAware", "LocalityAffinity",
     "WeightedInterleave", "make_placement",
-    "Fabric", "partition_trace", "spill_pages",
+    "MigrationPolicy", "MigrationPlan", "SegmentView", "NoMigration",
+    "SpillPressure", "TrafficRebalance", "make_migration_policy",
+    "Fabric", "partition_trace", "spill_pages", "apply_migrations",
+    "segment_stats",
 ]

@@ -1,33 +1,76 @@
-"""Cross-expander spill/migration (DESIGN.md §11).
+"""Cross-expander migration mechanism (DESIGN.md §11/§13).
 
-When one expander's freelists run dry while others have headroom, the
-fabric migrates compressed pages from the starved expander to a donor:
-the page's chunks are read on the source (charged as demotion-read
-traffic there), freed, and the page is re-stored on the destination
-(allocation + demotion-write + compression-store bookkeeping charged
-there) — the same §4 mechanism ops demotion uses, so invariants I1–I5
-hold on both expanders after every migration. Only *non-promoted*
+When pages move between expanders — freelist-pressure spill or
+traffic-imbalance rebalancing (fabric/migration.py decides) — the
+mechanism is the same: the page's chunks are read on the source (charged
+as demotion-read traffic there), freed, and the page is re-stored on the
+destination (allocation + demotion-write + compression-store bookkeeping
+charged there) — the same §4 mechanism ops demotion uses, so invariants
+I1–I5 hold on both expanders after every migration. Only *non-promoted*
 chunk-backed pages are eligible: hot pages stay where their traffic is,
 and zero pages occupy no chunks so moving them frees nothing.
 
+The plan/apply split (§13): ``segment_stats`` computes the per-expander
+facts a ``MigrationPolicy`` plans from — freelist headroom, per-page
+eligibility, per-page referenced bits (metadata-cache residency, the
+§4.4 lazy-reference live set) — *inside* the vmapped segment replay, so
+planning costs no extra host sync. ``apply_migrations`` applies one
+epoch's explicit (page, src, dst) moves on the stacked pool state in a
+single jit call, re-checking eligibility and donor headroom per move —
+a page that promoted or invalidated while its plan was in flight is
+skipped, never corrupted. ``spill_pages`` (in-jit candidate selection on
+a sliced pool pair) is the PR 3 API, kept for compatibility.
+
 Traffic is charged per expander on the pool the access physically
-touches; fabric-level event counts (pages/bytes moved, spill events)
+touches; fabric-level event counts (pages/bytes moved, epochs, syncs)
 live on the host ``Fabric`` object (fabric/replay.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.common.types import PoolConfig
+from repro.core import mcache as mcc
 from repro.core import metadata as md
 from repro.core.engine import ops
 from repro.core.engine.policy import Policy
 from repro.core.engine.state import (C_DEMO_RD, C_DEMO_WR, C_META_RD,
                                      C_META_WR, CTR_DTYPE, Pool, bump)
+
+
+class SegmentStats(NamedTuple):
+    """Per-expander migration facts, computed in-jit each segment (one
+    leading expander axis under the fabric's vmap). The singles/groups
+    split is exposed so the PLANNER's donor rule can use the same safe
+    allocation margin the APPLY enforces (7 singles + 1 group) — a plan
+    whose every move the apply would skip is a livelock, not a plan."""
+    free_units: jnp.ndarray   # int32[]  cfree + 8*gfree, in chunk units
+    free_singles: jnp.ndarray  # int32[] cfree.top
+    free_groups: jnp.ndarray  # int32[]  gfree.top
+    eligible: jnp.ndarray     # bool[P]  valid & ~promoted & chunk-backed
+    referenced: jnp.ndarray   # bool[P]  metadata-cache-resident (§4.4)
+
+
+def segment_stats(pool: Pool, cfg: PoolConfig) -> SegmentStats:
+    """One expander's migration-planning facts. Referenced bits at page
+    granularity for *compressed* pages are metadata-cache residency — the
+    same recency signal the demotion engine probes to protect hot pages
+    (the activity-region referenced bits cover only promoted pages, which
+    never migrate)."""
+    w0s = pool.meta[:, 0]
+    eligible = (md.get_valid(w0s) == 1) & (md.get_promoted(w0s) == 0) & \
+        (md.get_num_chunks(w0s) > 0)
+    free_units = pool.cfree.top + 8 * pool.gfree.top
+    ids = jnp.arange(cfg.n_pages, dtype=jnp.int32)
+    sets = mcc._set_index(ids, pool.cache.tags.shape[0])
+    referenced = jnp.any(pool.cache.tags[sets] == ids[:, None], axis=1)
+    return SegmentStats(free_units=free_units, free_singles=pool.cfree.top,
+                        free_groups=pool.gfree.top, eligible=eligible,
+                        referenced=referenced)
 
 
 def migrate_page(src: Pool, dst: Pool, cfg: PoolConfig, policy: Policy,
@@ -106,3 +149,44 @@ def spill_pages(src: Pool, dst: Pool, cfg: PoolConfig, policy: Policy,
 
     moved0 = jnp.full((k,), -1, jnp.int32)
     return jax.lax.fori_loop(0, k, body, (src, dst, moved0))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def apply_migrations(pools: Pool, cfg: PoolConfig, policy: Policy,
+                     pages, srcs, dsts) -> Tuple[Pool, jnp.ndarray]:
+    """Apply one migration epoch on the STACKED pool state in one jit call.
+
+    ``pages``/``srcs``/``dsts`` are int32[k] (pages -1-padded): explicit
+    moves a ``MigrationPolicy`` planned host-side, possibly one segment
+    ago. Each move re-checks donor headroom (7 singles + 1 group, the
+    safe allocation margin) against the donor's LIVE freelists and page
+    eligibility against the LIVE metadata (inside ``migrate_page``), so a
+    stale plan skips — never corrupts — a page whose state changed while
+    the plan was in flight. Returns the updated stack plus int32[k] of
+    the OSPNs that actually moved (-1 where skipped); the host turns that
+    into ONE batched override-table scatter (`Placement.apply_epoch`)."""
+    def body(i, carry):
+        stack, moved = carry
+        p, s, d = pages[i], srcs[i], dsts[i]
+
+        def do(c):
+            stack, moved = c
+            src = jax.tree_util.tree_map(lambda a: a[s], stack)
+            dst = jax.tree_util.tree_map(lambda a: a[d], stack)
+            headroom = (dst.cfree.top >= 7) & (dst.gfree.top >= 1)
+
+            def go(c2):
+                stack2, m2 = c2
+                src2, dst2, did = migrate_page(src, dst, cfg, policy, p)
+                stack2 = jax.tree_util.tree_map(
+                    lambda a, x: a.at[s].set(x), stack2, src2)
+                stack2 = jax.tree_util.tree_map(
+                    lambda a, x: a.at[d].set(x), stack2, dst2)
+                return stack2, m2.at[i].set(jnp.where(did, p, -1))
+
+            return jax.lax.cond(headroom, go, lambda c2: c2, (stack, moved))
+
+        return jax.lax.cond((p >= 0) & (s != d), do, lambda c: c, carry)
+
+    moved0 = jnp.full(pages.shape, -1, jnp.int32)
+    return jax.lax.fori_loop(0, pages.shape[0], body, (pools, moved0))

@@ -38,6 +38,9 @@ class Placement:
         self.n_pages = n_pages
         # spill/migration overrides: -1 = follow the base rule
         self.overrides = np.full((n_pages,), -1, np.int32)
+        # committed migration epochs (one per apply_epoch batch; the
+        # segment scheduler's "one scatter per epoch" contract)
+        self.epoch = 0
 
     def assign(self, ospns: np.ndarray) -> np.ndarray:
         """Base page->expander rule (int32[len(ospns)])."""
@@ -51,8 +54,20 @@ class Placement:
         return np.where(ov >= 0, ov, base).astype(np.int32)
 
     def override(self, ospns: np.ndarray, expander: int) -> None:
-        """Pin migrated pages to their new expander."""
-        self.overrides[np.asarray(ospns, np.int64)] = np.int32(expander)
+        """Pin migrated pages to their new expander (one destination)."""
+        self.apply_epoch(ospns, np.full(len(np.atleast_1d(ospns)),
+                                        expander, np.int32))
+
+    def apply_epoch(self, ospns: np.ndarray, dests: np.ndarray) -> None:
+        """Commit one migration epoch: pin each page to its destination in
+        a SINGLE batched scatter (no per-page host writes — the segment
+        scheduler's override-update contract, DESIGN.md §13). Bumps the
+        epoch counter even for empty batches so the scheduler's
+        epoch/sync accounting stays 1:1 with committed applies."""
+        ospns = np.atleast_1d(np.asarray(ospns, np.int64))
+        if len(ospns):
+            self.overrides[ospns] = np.asarray(dests, np.int32)
+        self.epoch += 1
 
 
 class StaticInterleave(Placement):

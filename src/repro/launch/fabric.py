@@ -1,13 +1,20 @@
 """Multi-expander fabric launcher: replay a paper workload through a fabric
-of N simulated expanders with a chosen placement mode (DESIGN.md §11).
+of N simulated expanders with a chosen placement mode (DESIGN.md §11/§13).
 
   PYTHONPATH=src python -m repro.launch.fabric --workload mcf --expanders 4 \
       --placement interleave --accesses 4096 --seed 0
 
 ``--skew`` forces a weighted placement that sends that fraction of pages to
-expander 0 (spill stress); ``--check-parity`` additionally replays every
-expander's partition through the single-pool engine and asserts the summed
-counters match the fabric exactly.
+expander 0 (migration stress); ``--migration {spill,rebalance,off}`` picks
+the MigrationPolicy (spill = freelist pressure, rebalance = pressure +
+traffic-imbalance trigger); ``--sync-migration`` forces the synchronous
+reference driver (PR 3 semantics: migration on the critical path);
+``--pipeline-depth 1`` runs the pipelined scheduler degenerately (plan and
+apply at the same boundary). ``--verify-depth1`` replays the same trace
+through BOTH and asserts final pool state + counters are bit-identical
+(the refactor's parity pin — the CI smoke). ``--check-parity``
+additionally replays every expander's partition through the single-pool
+engine and asserts the summed counters match the fabric exactly.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import argparse
 import time
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engine import batch as B
 from repro.core.engine import state as S
@@ -41,7 +49,24 @@ def main() -> None:
                     help="promoted P-chunks per expander")
     ap.add_argument("--window", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-spill", action="store_true")
+    ap.add_argument("--migration", default="spill",
+                    choices=("spill", "rebalance", "off"),
+                    help="MigrationPolicy: freelist-pressure spill, "
+                         "pressure + traffic-imbalance rebalancing, or off")
+    ap.add_argument("--no-spill", action="store_true",
+                    help="back-compat alias for --migration off")
+    ap.add_argument("--sync-migration", action="store_true",
+                    help="force the synchronous reference driver (plan and "
+                         "apply at every boundary, migration on the "
+                         "critical path — the parity anchor)")
+    ap.add_argument("--pipeline-depth", type=int, default=2, choices=(1, 2),
+                    help="segment-scheduler depth: 2 overlaps migration "
+                         "behind the next segment's replay, 1 degenerates "
+                         "to the synchronous schedule")
+    ap.add_argument("--verify-depth1", action="store_true",
+                    help="replay the trace through the depth-1 pipeline AND "
+                         "the synchronous driver and assert bit-identical "
+                         "final state (the CI overlapped-migration smoke)")
     ap.add_argument("--check-parity", action="store_true")
     ap.add_argument("--device-profile", default="default",
                     help="comma-separated simx.time.DEVICE_PROFILES names "
@@ -68,15 +93,24 @@ def main() -> None:
     ospn, wr, blk = make_trace(spec, n_accesses=args.accesses,
                                n_pages=args.pages, seed=args.seed)
     n = args.expanders
-    if args.skew > 0:
-        rest = (1.0 - args.skew) / max(n - 1, 1)
-        placement = make_placement("weighted", n, args.pages,
-                                   weights=[args.skew] + [rest] * (n - 1))
-    else:
-        placement = make_placement(args.placement, n, args.pages)
-    fab = Fabric(cfg, policy, placement, seed=args.seed,
-                 rates_table=jnp.asarray(rates), window=args.window,
-                 spill=not args.no_spill, devices=devices)
+
+    def new_placement():
+        if args.skew > 0:
+            rest = (1.0 - args.skew) / max(n - 1, 1)
+            return make_placement("weighted", n, args.pages,
+                                  weights=[args.skew] + [rest] * (n - 1))
+        return make_placement(args.placement, n, args.pages)
+
+    placement = new_placement()
+    migration = "off" if args.no_spill else args.migration
+
+    def make_fabric(pl, **kw):
+        return Fabric(cfg, policy, pl, seed=args.seed,
+                      rates_table=jnp.asarray(rates), window=args.window,
+                      migration=migration, devices=devices, **kw)
+
+    fab = make_fabric(placement, sync_migration=args.sync_migration,
+                      pipeline_depth=args.pipeline_depth)
     t0 = time.time()
     fab.replay(ospn, wr, blk)
     dt = time.time() - t0
@@ -102,13 +136,34 @@ def main() -> None:
     print(f"  delivered time (bottleneck expander "
           f"{int(delivered.argmax())}): {bottleneck * 1e6:.1f}us "
           f"({args.accesses / bottleneck:,.0f} modeled acc/s)")
-    print(f"  spill: {fab.spill_stats()}")
+    print(f"  migration ({fab.migration_policy.name}): {fab.spill_stats()}")
+    ss = fab.sync_stats()
+    assert ss["segment_syncs"] == ss["segments"], ss
+    assert ss["epoch_syncs"] == ss["epochs"], ss
+    print(f"  syncs: {ss} (one per segment + one per epoch, asserted)")
+    pt = fab.pipeline_times()
+    if pt is not None and fab.epochs_applied:
+        over = float(np.max(pt["overlapped_s"]))
+        sync = float(np.max(pt["sync_s"]))
+        print(f"  pipeline pricing ({pt['mode']}): overlapped={over * 1e6:.1f}us "
+              f"sync={sync * 1e6:.1f}us "
+              f"(migration overlap hides {(sync - over) * 1e6:.2f}us)")
+
+    if args.verify_depth1:
+        f1 = make_fabric(new_placement(), pipeline_depth=1)
+        fs = make_fabric(new_placement(), sync_migration=True)
+        f1.replay(ospn, wr, blk)
+        fs.replay(ospn, wr, blk)
+        assert f1.state_identical(fs), \
+            "depth-1 pipeline drifted from the synchronous driver"
+        print(f"  verify-depth1: depth-1 pipeline == synchronous driver "
+              f"(bit-identical; {fs.epochs_applied} epochs)")
 
     if args.check_parity:
         eids = placement.route(ospn)
         if (placement.overrides >= 0).any():
-            print("parity check skipped: spill fired (re-run with "
-                  "--no-spill for the exact contract)")
+            print("parity check skipped: migration fired (re-run with "
+                  "--migration off for the exact contract)")
             return
         stack0 = S.make_pool_stack(cfg, n, seed=args.seed,
                                    rates_table=jnp.asarray(rates))

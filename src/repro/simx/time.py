@@ -233,6 +233,35 @@ def uncompressed_time(n_host, dev: DeviceLike):
     return float(t) if np.ndim(t) == 0 else t
 
 
+def pipeline_delivered_time(replay_deltas, migration_deltas, dev: DeviceLike,
+                            overlapped: bool = True):
+    """Delivered seconds of the fabric's two-stage segment pipeline
+    (DESIGN.md §13): per-segment counter DELTAS priced segment by segment,
+    then summed per expander.
+
+    ``replay_deltas``/``migration_deltas``: float/int ``[S, N_counters]``
+    or ``[S, N, N_counters]`` in ``state.COUNTER_NAMES`` order — segment
+    ``s``'s foreground replay delta and the migration-epoch delta the
+    scheduler overlapped with it (zeros when no epoch was in flight).
+
+    ``overlapped=True`` prices each segment as
+    ``max(replay_s, migration_s)`` — the pipeline hides an epoch's
+    migration behind the next segment's foreground replay (an optimistic
+    full-overlap bound: real channels would contend). ``False`` prices the
+    synchronous path, ``replay_s + migration_s`` — migration on the
+    critical path. ``overlapped <= sync`` holds segmentwise by
+    construction (max <= sum of non-negatives); benches assert it on the
+    same run's deltas. Note the per-segment max is NOT the cumulative
+    ``exec_time_vec`` of summed counters — the pipeline model resolves
+    the bottleneck resource per segment, the cumulative model once."""
+    xp = np if isinstance(replay_deltas, np.ndarray) else jnp
+    t_replay = exec_time_vec(replay_deltas, dev, xp=xp)
+    t_mig = exec_time_vec(migration_deltas, dev, xp=xp)
+    per_seg = xp.maximum(t_replay, t_mig) if overlapped \
+        else t_replay + t_mig
+    return per_seg.sum(axis=0)
+
+
 # ---------------------------------------------------------------------------
 # Serving-side model: preempt/resume byte + host-sync counters → seconds
 # (serve/engine.py counters; DESIGN.md §12).

@@ -1,4 +1,4 @@
-"""Multi-expander fabric tests (DESIGN.md §11).
+"""Multi-expander fabric tests (DESIGN.md §11/§13).
 
   * parity — the vmapped masked replay adds ZERO counter drift: per-expander
     counters are bit-identical to single-pool ``batch.replay_trace`` runs of
@@ -7,6 +7,13 @@
   * spill — a skew-saturated expander (cfree/gfree draining) spills to an
     idle donor: invariants I1–I5 hold on every expander afterwards and
     traffic lands on the right expander's counters;
+  * segment scheduler — the depth-1 pipeline is bit-identical to the
+    synchronous reference driver; overlapped (depth-2) migration defers
+    in-flight pages' accesses to the page's final home; the rebalance
+    policy shrinks the per-expander delivered-time spread on a skewed
+    trace while I1–I5 hold after every epoch; pipeline pricing satisfies
+    overlapped <= sync on the same deltas; one host sync per segment and
+    one per epoch;
   * serving — lanes stripe across expanders, parked payloads are charged
     per-expander and victim selection balances parked load.
 """
@@ -21,6 +28,8 @@ from repro.core.engine import state as S
 from repro.core.engine.policy import POLICIES, SecondChanceLanes
 from repro.fabric import (CapacityAware, Fabric, LocalityAffinity,
                           StaticInterleave, WeightedInterleave)
+from repro.fabric import migration as MG
+from repro.fabric import ops as fops
 from repro.simx.engine import pool_cfg_for
 from repro.simx.trace import WORKLOADS, make_rates_table, make_trace
 from helpers import check_pool_invariants
@@ -264,6 +273,230 @@ def test_fabric_segment_delta_tracking():
         total += d
     final = np.asarray(jax.device_get(fab.pools.counters), np.int64)
     assert (total == final).all()
+
+
+def test_depth1_pipeline_bit_identical_to_sync():
+    """The degenerate (depth-1) pipeline — plan and apply at the same
+    boundary — must produce bit-identical final pool state, counters, and
+    override tables to the synchronous reference driver, on a config
+    where migration actually fires. This pins the overlap machinery
+    (pending masks, deferral, delayed apply) against the PR 3 parity
+    suite: at depth 1 it must all be invisible."""
+    cfg, pl_d1, f_d1, tr = _saturating_fabric()
+    f_d1.pipeline_depth = 1
+    _, pl_sync, f_sync, tr2 = _saturating_fabric()
+    f_sync.sync_migration = True
+    f_d1.replay(*tr)
+    f_sync.replay(*tr2)
+    assert f_sync.spill_stats()["events"] > 0, "reference never migrated"
+    assert f_d1.state_identical(f_sync), \
+        "depth-1 pipeline drifted from the synchronous driver"
+    assert f_d1.counters() == f_sync.counters()
+    assert f_d1.spill_stats() == f_sync.spill_stats()
+
+
+def test_overlapped_urgent_spill_keeps_invariants():
+    """The default (depth-2) scheduler on the saturating config: pressure
+    plans from a starved source are URGENT and apply at the same boundary
+    (relief one segment late is relief after the freelists ran dry), so
+    invariants hold on both expanders and migration traffic lands on the
+    right sides even under overlap."""
+    cfg, placement, fab, (ospn, wr, blk) = _saturating_fabric()
+    assert fab.pipeline_depth == 2 and not fab.sync_migration
+    fab.replay(ospn, wr, blk)
+    assert fab.spill_stats()["events"] > 0
+    for e in range(2):
+        check_pool_invariants(S.pool_slice(fab.pools, e), cfg)
+    ss = fab.sync_stats()
+    assert ss["segment_syncs"] == ss["segments"]
+    assert ss["epoch_syncs"] == ss["epochs"] == fab.placement.epoch
+    c0, c1 = fab.counters_by_expander()
+    assert c0["demo_rd"] > 0 and c1["demo_wr"] > 0
+
+
+class _ScriptedOnce(MG.MigrationPolicy):
+    """Plans a fixed page set exactly once, when armed (test harness for
+    the in-flight deferral path)."""
+    name = "scripted"
+
+    def __init__(self):
+        self.pages = None
+        self.armed = False
+
+    def plan(self, view):
+        if not self.armed or self.pages is None:
+            return None
+        self.armed = False
+        k = len(self.pages)
+        return MG.MigrationPlan(np.asarray(self.pages, np.int32),
+                                np.zeros((k,), np.int32),
+                                np.ones((k,), np.int32))
+
+
+def test_overlapped_migration_defers_inflight_accesses():
+    """Depth-2 overlap: accesses to a page whose migration plan is in
+    flight are deferred by the carried pending mask and replayed after
+    the epoch commits — served (and charged) on the page's FINAL home,
+    never on the source mid-migration."""
+    cfg = _small_cfg()
+    scripted = _ScriptedOnce()
+    placement = WeightedInterleave(2, cfg.n_pages, [1.0, 0.0])
+    fab = Fabric(cfg, POLICY, placement, seed=0,
+                 rates_table=jnp.asarray(
+                     np.full((cfg.n_pages, cfg.blocks_per_page), 2,
+                             np.int32)),
+                 window=WINDOW, migration=scripted,
+                 spill_interval=WINDOW)
+    # warm: 32 first-touch writes overflow the 16-P-chunk promoted region,
+    # demoting early pages into the compressed region (migration-eligible)
+    warm = np.arange(32, dtype=np.int32)
+    fab.replay(warm, np.ones((32,), bool), np.zeros((32,), np.int32))
+    stats = fops.segment_stats(S.pool_slice(fab.pools, 0), cfg)
+    eligible = np.nonzero(np.asarray(jax.device_get(stats.eligible)))[0]
+    assert len(eligible) >= 4, "warm phase left no eligible pages"
+    pages = eligible[:4]
+    scripted.pages = pages
+    scripted.armed = True
+    # segment 1: filler writes (plan fires at its boundary); segment 2:
+    # reads of the planned pages — IN FLIGHT, so all deferred; segment 3:
+    # more filler. The deferred reads replay after the commit, on e1.
+    filler1 = np.arange(32, 40, dtype=np.int32)
+    reads = np.concatenate([pages, pages]).astype(np.int32)
+    filler2 = np.arange(40, 48, dtype=np.int32)
+    ospn = np.concatenate([filler1, reads, filler2])
+    wr = np.concatenate([np.ones(8, bool), np.zeros(8, bool),
+                         np.ones(8, bool)])
+    blk = np.zeros((24,), np.int32)
+    before = fab.counters_by_expander()
+    assert before[1]["host_reads"] + before[1]["host_writes"] == 0
+    fab.replay(ospn, wr, blk)
+    assert (placement.route(pages) == 1).all(), "pages did not migrate"
+    c0, c1 = fab.counters_by_expander()
+    # every deferred read was served by the donor, none leaked to the
+    # source mid-migration; writes stayed on e0
+    assert c1["host_reads"] == len(reads), (c0["host_reads"],
+                                            c1["host_reads"])
+    assert c0["host_reads"] == 0
+    assert c0["host_writes"] == 48 and c1["host_writes"] == 0
+    for e in range(2):
+        check_pool_invariants(S.pool_slice(fab.pools, e), cfg)
+    ss = fab.sync_stats()
+    assert ss["segment_syncs"] == ss["segments"]
+    assert ss["epoch_syncs"] == ss["epochs"] == 1
+
+
+class _ScriptedAlways(MG.MigrationPolicy):
+    """Re-plans the same pages at every boundary (livelock-guard probe)."""
+    name = "scripted-always"
+
+    def __init__(self, pages):
+        self.pages = np.asarray(pages, np.int32)
+        self.armed = False
+
+    def plan(self, view):
+        if not self.armed:
+            return None
+        k = len(self.pages)
+        return MG.MigrationPlan(self.pages, np.zeros((k,), np.int32),
+                                np.ones((k,), np.int32))
+
+
+def test_unappliable_plan_does_not_livelock():
+    """A plan whose every move the apply refuses (here: the page is
+    promoted, so ineligible) while the remaining trace keeps accessing
+    the planned page would recur forever — deferred accesses rebuild the
+    same remainder and the policy re-plans the same page. The livelock
+    guard bars zero-progress pages from re-planning, so the replay
+    terminates and the deferred accesses are served on the source."""
+    cfg = _small_cfg()
+    scripted = _ScriptedAlways([0])
+    placement = WeightedInterleave(2, cfg.n_pages, [1.0, 0.0])
+    fab = Fabric(cfg, POLICY, placement, seed=0,
+                 rates_table=jnp.asarray(
+                     np.full((cfg.n_pages, cfg.blocks_per_page), 2,
+                             np.int32)),
+                 window=WINDOW, migration=scripted,
+                 spill_interval=WINDOW)
+    # page 0 is written once -> promoted (first-touch lands hot; only 4
+    # writes, so the demotion watermark never fires) -> never
+    # migration-eligible
+    warm = np.arange(4, dtype=np.int32)
+    fab.replay(warm, np.ones((4,), bool), np.zeros((4,), np.int32))
+    scripted.armed = True
+    reads = np.concatenate([np.arange(8, 16, dtype=np.int32),
+                            np.zeros((16,), np.int32)])
+    fab.replay(reads, np.zeros((24,), bool), np.zeros((24,), np.int32))
+    c0, c1 = fab.counters_by_expander()
+    assert c0["host_reads"] == 24 and c1["host_reads"] == 0
+    assert fab.spill_stats()["pages_out"] == [0, 0]
+    assert fab._blocked[0], "zero-progress page was not barred"
+    assert (placement.overrides == -1).all()
+
+
+def test_rebalance_reduces_delivered_time_spread():
+    """The traffic-imbalance trigger on a 0.8-skewed trace: referenced
+    compressed pages migrate hot -> cold, so the per-expander
+    delivered-time spread shrinks vs the pressure-only spill policy
+    (which never fires here — chunk headroom is ample), and I1–I5 hold
+    on source and destination after EVERY migration epoch."""
+    cfg = _small_cfg()
+    rates, ospn, wr, blk = _trace(cfg, n_accesses=512, seed=7)
+
+    epochs_checked = []
+
+    def check_epoch(fab, plan, moved):
+        for e in range(2):
+            check_pool_invariants(S.pool_slice(fab.pools, e), fab.cfg)
+        epochs_checked.append(len(moved))
+
+    def run(mode, cb=None):
+        fab = Fabric(cfg, POLICY,
+                     WeightedInterleave(2, cfg.n_pages, [0.8, 0.2]),
+                     seed=0, rates_table=jnp.asarray(rates), window=WINDOW,
+                     migration=mode, spill_interval=8 * WINDOW,
+                     on_epoch=cb)
+        fab.replay(ospn, wr, blk)
+        return fab
+
+    fab_spill = run("spill")
+    fab_reb = run("rebalance", check_epoch)
+    assert fab_spill.spill_stats()["events"] == 0, \
+        "pressure spill fired; the comparison is no longer rebalance-only"
+    assert fab_reb.epochs_applied > 0 and sum(epochs_checked) > 0, \
+        "rebalance trigger never fired"
+    t_spill = fab_spill.delivered_time()
+    t_reb = fab_reb.delivered_time()
+    spread = lambda t: float(t.max() / max(t.min(), 1e-18))  # noqa: E731
+    assert spread(t_reb) < spread(t_spill), (t_reb, t_spill)
+    ss = fab_reb.sync_stats()
+    assert ss["segment_syncs"] == ss["segments"]
+    assert ss["epoch_syncs"] == ss["epochs"]
+    # rebalance epochs are proactive (never urgent here: headroom is
+    # ample), so they genuinely overlapped foreground replay — the
+    # pipeline pricing must show a strict win somewhere
+    pt = fab_reb.pipeline_times()
+    assert pt["mode"] == "overlapped"
+    assert (pt["overlapped_s"] <= pt["sync_s"] + 1e-15).all()
+    assert (pt["overlapped_s"] < pt["sync_s"]).any(), \
+        "no migration epoch was hidden behind replay"
+
+
+def test_pipeline_pricing_urgent_epochs_stay_on_critical_path():
+    """With ``proactive=1.0`` the spill trigger IS the hard watermark, so
+    every plan is URGENT and applies synchronously — the pipeline pricing
+    must NOT grant those epochs the overlap discount: overlapped and sync
+    pricing coincide exactly, even on an overlapped-mode run."""
+    cfg, placement, fab, (ospn, wr, blk) = _saturating_fabric()
+    fab.migration_policy = MG.SpillPressure(k=8, low=40, proactive=1.0)
+    fab.replay(ospn, wr, blk)
+    assert fab.epochs_applied > 0
+    assert all(not over for _, _, over in fab.migration_deltas), \
+        "saturation epochs should all be urgent/synchronous"
+    pt = fab.pipeline_times()
+    assert pt is not None and pt["mode"] == "overlapped"
+    assert (pt["overlapped_s"] == pt["sync_s"]).all(), \
+        "urgent epochs were granted the overlap discount"
+    assert (pt["delivered_s"] == pt["overlapped_s"]).all()
 
 
 def test_second_chance_lanes_group_balancing():
