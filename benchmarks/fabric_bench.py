@@ -179,6 +179,31 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                                 f"delivered={d['bottleneck_s'] * 1e6:.1f}us;"
                                 f"modeled={modeled:,.0f}acc/s;"
                                 f"internal={_internal(fab.counters())}"})
+        if n == 1:
+            c_1x = dict(fab.counters(),
+                        internal_accesses=_internal(fab.counters()))
+
+    # -- measurement-calibrated engine pricing (tentpole (b)): the N=1
+    # delivered-time point re-priced with engine constants derived from the
+    # measured kernel throughput in BENCH_kernels.json (paper constants when
+    # the bench artifact is absent)
+    cal_dev = TM.calibrated_device()
+    paper_dev = TM.DeviceConfig()
+    calibration = {
+        "source": "BENCH_kernels.json" if cal_dev != paper_dev
+                  else "paper-fallback",
+        "comp_cycles": cal_dev.comp_cycles,
+        "decomp_cycles": cal_dev.decomp_cycles,
+        "paper_comp_cycles": paper_dev.comp_cycles,
+        "paper_decomp_cycles": paper_dev.decomp_cycles,
+        "delivered_time_s_1x_paper": float(DEV.exec_time(c_1x, paper_dev)),
+        "delivered_time_s_1x_calibrated":
+            float(DEV.exec_time(c_1x, cal_dev)),
+    }
+    rows.append({"name": "fabric.calibrated_1x", "us": 0.0,
+                 "derived": f"paper={calibration['delivered_time_s_1x_paper'] * 1e6:.1f}us;"
+                            f"calibrated={calibration['delivered_time_s_1x_calibrated'] * 1e6:.1f}us;"
+                            f"src={calibration['source']}"})
 
     # -- mixed-generation fleets (spill live, skewed placement) --------------
     # the fleet rows shrink the per-expander compressed region so the 0.8
@@ -385,6 +410,7 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                          "bandwidth curve; per-expander DeviceConfig, "
                          "spill traffic charged where it occurs)"},
         "scaling": scaling,
+        "calibration": calibration,
         "mixed_fleets": mixed,
         "skew": skew_rows,
         "migration": migration,

@@ -30,7 +30,8 @@ def main() -> None:
 
     suites = [(f.__name__, lambda q, s, f=f: f(q)) for f in
               paper_figs.ALL_FIGS]
-    suites.append(("kernel", lambda q, s: kernel_bench.run(q)))
+    # Pallas kernel timings + engine calibration -> BENCH_kernels.json
+    suites.append(("kernels", kernel_bench.run))
     suites.append(("system", lambda q, s: system_bench.run(q)))
     # trace-replay throughput; also writes BENCH_simx.json (accesses/sec per
     # scheme, serial-vs-batched) so the perf trajectory is machine-readable

@@ -119,6 +119,11 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
 
     # modeled seconds: serial vs batched vs fabric-striped in one currency
     ms, mb, mf = (e.modeled_time() for e in (se, be, fe))
+    # same counters re-priced with the measurement-calibrated engine (no-op
+    # fallback to paper constants when BENCH_kernels.json is absent)
+    from repro.simx import time as TM
+    cal_dev = TM.calibrated_device()
+    mb_cal = be.modeled_time(cal_dev)
 
     shadow_bytes = _shadow_repreempt_bytes(cfg, scfg, params, prompts,
                                            max_len)
@@ -155,6 +160,11 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
             "modeled_speedup_batched_over_serial":
                 ms["modeled_s_per_step"] / max(mb["modeled_s_per_step"],
                                                1e-18),
+            "batched_calibrated": dict(
+                mb_cal,
+                device={"comp_cycles": cal_dev.comp_cycles,
+                        "decomp_cycles": cal_dev.decomp_cycles,
+                        "calibrated": cal_dev != TM.DeviceConfig()}),
         },
     }
     JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")

@@ -232,6 +232,13 @@ class PoolConfig:
     tol4: float = 0.10
     tol8: float = 0.01
     lossless: bool = False             # exact roundtrip required for 4/8-bit rates
+    # compression engine implementation: "auto" runs the fused Pallas kernels
+    # on TPU and the bit-identical jnp oracle elsewhere; "kernel"/"jnp" force
+    # a path (core/compressor.py::resolve_impl)
+    compress_impl: str = "auto"
+    # batched multi-victim demotion ("auto" follows compress_impl resolution;
+    # "on"/"off" force) — core/engine/ops.py::demote_batch
+    fused_demote: str = "auto"
 
     @property
     def blocks_per_page(self) -> int:
@@ -307,6 +314,9 @@ class ServeConfig:
     # preempted payloads park per-expander and victim selection balances
     # parked load across expanders (serve/engine.py, fabric/)
     n_expanders: int = 1
+    # KV lane quantization implementation ("auto"/"kernel"/"jnp"), resolved
+    # by core/compressor.py::quantize_blocks_fast at trace time
+    quantize_impl: str = "auto"
     pool: PoolConfig = field(default_factory=PoolConfig)
 
 

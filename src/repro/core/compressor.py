@@ -31,12 +31,29 @@ from repro.core.bitpack import (RATE_4BIT, RATE_8BIT, RATE_RAW, RATE_ZERO,
 QUANTUM = 128
 
 
-def block_quanta_table(vals_per_block: int) -> jnp.ndarray:
-    """quanta per rate code for a block of ``vals_per_block`` bf16 values."""
+def resolve_impl(cfg: PoolConfig) -> str:
+    """Resolve ``cfg.compress_impl``: "auto" picks the fused Pallas kernels
+    on TPU and the pure-jnp oracle elsewhere (the interpreter would put a
+    per-op Python loop on the hot path); "kernel"/"jnp" force a path (tests
+    force "kernel" in interpret mode to assert bit-identity)."""
+    impl = getattr(cfg, "compress_impl", "auto")
+    if impl == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "jnp"
+    return impl
+
+
+def quanta_per_rate(vals_per_block: int) -> Tuple[int, int, int, int]:
+    """Static (python-int) quanta per rate code for a ``vals_per_block``
+    block — the fused kernel's static size table."""
     b4 = -(-(4 + vals_per_block // 2) // QUANTUM)
     b8 = -(-(4 + vals_per_block) // QUANTUM)
     braw = (2 * vals_per_block) // QUANTUM
-    return jnp.array([0, b4, b8, braw], dtype=jnp.int32)
+    return (0, b4, b8, braw)
+
+
+def block_quanta_table(vals_per_block: int) -> jnp.ndarray:
+    """quanta per rate code for a block of ``vals_per_block`` bf16 values."""
+    return jnp.array(quanta_per_rate(vals_per_block), dtype=jnp.int32)
 
 
 def select_rate(x: jnp.ndarray, cfg: PoolConfig) -> jnp.ndarray:
@@ -108,13 +125,27 @@ def _decode_block_dense(buf: jnp.ndarray, rate: jnp.ndarray, vals: int) -> jnp.n
     return jax.lax.switch(rate, [dec_zero, dec4, dec8, dec_raw])
 
 
-def encode_page(x: jnp.ndarray, cfg: PoolConfig
-                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Compress a page of ``vals_per_page`` bf16 values.
+def _compact_page(dense: jnp.ndarray, quanta: jnp.ndarray,
+                  cfg: PoolConfig) -> jnp.ndarray:
+    """Compact dense per-block buffers [B, 2*vals] into one page stream at
+    quanta granularity (shared by the jnp and kernel encode paths)."""
+    nblocks = dense.shape[0]
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(quanta)[:-1]])
+    buf = jnp.zeros((cfg.page_bytes,), jnp.uint8)
+    pos = jnp.arange(cfg.page_bytes, dtype=jnp.int32)
+    for i in range(nblocks):          # static trip count (4 or 1)
+        # write the dense worst-case buffer at the compacted offset; overlap
+        # with later blocks is fine because later writes overwrite pad bytes.
+        start = offsets[i] * QUANTUM
+        shifted = jax.lax.dynamic_update_slice(
+            jnp.zeros((cfg.page_bytes,), jnp.uint8), dense[i], (start,))
+        live = (pos >= start) & (pos < start + quanta[i] * QUANTUM)
+        buf = jnp.where(live, shifted, buf)
+    return buf
 
-    Returns (buf uint8[page_bytes] with compacted streams, rates i32[B],
-    quanta i32[B], num_chunks i32[]) where B = blocks_per_page (co-location)
-    or 1 (4KB-block mode)."""
+
+def _encode_page_jnp(x: jnp.ndarray, cfg: PoolConfig):
     nblocks = cfg.blocks_per_page if cfg.coloc else 1
     vals = x.shape[-1] // nblocks
     blocks = x.reshape(nblocks, vals)
@@ -123,36 +154,101 @@ def encode_page(x: jnp.ndarray, cfg: PoolConfig
         rates = jnp.maximum(rates, RATE_4BIT)
     qt = block_quanta_table(vals)
     quanta = qt[rates]
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(quanta)[:-1]])
-    buf = jnp.zeros((cfg.page_bytes,), jnp.uint8)
-    for i in range(nblocks):          # static trip count (4 or 1)
-        dense = _encode_block_dense(blocks[i], rates[i])
-        # write the dense worst-case buffer at the compacted offset; overlap
-        # with later blocks is fine because later writes overwrite pad bytes.
-        start = offsets[i] * QUANTUM
-        shifted = jax.lax.dynamic_update_slice(
-            jnp.zeros((cfg.page_bytes,), jnp.uint8), dense, (start,))
-        live = (jnp.arange(cfg.page_bytes, dtype=jnp.int32) >= start) & \
-               (jnp.arange(cfg.page_bytes, dtype=jnp.int32) < start + quanta[i] * QUANTUM)
-        buf = jnp.where(live, shifted, buf)
+    dense = jnp.stack([_encode_block_dense(blocks[i], rates[i])
+                       for i in range(nblocks)])
+    buf = _compact_page(dense, quanta, cfg)
     total_quanta = jnp.sum(quanta)
     qpc = cfg.chunk_bytes // QUANTUM
     num_chunks = -(-total_quanta // qpc)
     return buf, rates, quanta, num_chunks.astype(jnp.int32)
 
 
-def decode_page(buf: jnp.ndarray, rates: jnp.ndarray, cfg: PoolConfig) -> jnp.ndarray:
-    """Decompress all blocks of a page buffer back to bf16 values."""
-    nblocks = rates.shape[0]
-    vals = cfg.vals_per_page // nblocks
+def encode_pages(xs: jnp.ndarray, cfg: PoolConfig
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batched page compression: xs [P, vals_per_page] -> (bufs uint8
+    [P, page_bytes], rates i32[P, B], quanta i32[P, B], num_chunks i32[P]).
+
+    On the kernel path all P*B blocks go through ONE fused Pallas launch
+    (rate-select + quantize + pack + quanta emit in a single grid pass);
+    the jnp path vmaps the oracle. Both are bit-identical per page to
+    ``encode_page`` (tests/test_qpack_fused.py)."""
+    nblocks = cfg.blocks_per_page if cfg.coloc else 1
+    vals = xs.shape[-1] // nblocks
+    npages = xs.shape[0]
+    if resolve_impl(cfg) == "kernel":
+        from repro.kernels import ops as kops
+        dense, rates, quanta = kops.qpack_fused_encode(
+            xs.reshape(npages * nblocks, vals), tol4=cfg.tol4, tol8=cfg.tol8,
+            lossless=cfg.lossless, zero_elision=cfg.zero_elision,
+            quanta=quanta_per_rate(vals))
+        dense = dense.reshape(npages, nblocks, 2 * vals)
+        rates = rates.reshape(npages, nblocks)
+        quanta = quanta.reshape(npages, nblocks)
+        bufs = jax.vmap(lambda d, q: _compact_page(d, q, cfg))(dense, quanta)
+        qpc = cfg.chunk_bytes // QUANTUM
+        nchunks = (-(-jnp.sum(quanta, axis=-1) // qpc)).astype(jnp.int32)
+        return bufs, rates, quanta, nchunks
+    return jax.vmap(lambda x: _encode_page_jnp(x, cfg))(xs)
+
+
+def encode_page(x: jnp.ndarray, cfg: PoolConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compress a page of ``vals_per_page`` bf16 values.
+
+    Returns (buf uint8[page_bytes] with compacted streams, rates i32[B],
+    quanta i32[B], num_chunks i32[]) where B = blocks_per_page (co-location)
+    or 1 (4KB-block mode). Dispatches on ``cfg.compress_impl``: the fused
+    Pallas kernel on TPU, the jnp oracle elsewhere."""
+    if resolve_impl(cfg) == "kernel":
+        bufs, rates, quanta, nchunks = encode_pages(x[None], cfg)
+        return bufs[0], rates[0], quanta[0], nchunks[0]
+    return _encode_page_jnp(x, cfg)
+
+
+def _page_dense_blocks(buf: jnp.ndarray, rates: jnp.ndarray,
+                       vals: int) -> jnp.ndarray:
+    """Slice a compacted page stream back into dense per-block buffers."""
     qt = block_quanta_table(vals)
     quanta = qt[rates]
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(quanta)[:-1]])
-    outs = []
-    for i in range(nblocks):
-        dense = jax.lax.dynamic_slice(buf, (offsets[i] * QUANTUM,), (2 * vals,))
-        outs.append(_decode_block_dense(dense, rates[i], vals))
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(quanta)[:-1]])
+    return jnp.stack([
+        jax.lax.dynamic_slice(buf, (offsets[i] * QUANTUM,), (2 * vals,))
+        for i in range(rates.shape[0])])
+
+
+def _decode_page_jnp(buf: jnp.ndarray, rates: jnp.ndarray,
+                     cfg: PoolConfig) -> jnp.ndarray:
+    nblocks = rates.shape[0]
+    vals = cfg.vals_per_page // nblocks
+    dense = _page_dense_blocks(buf, rates, vals)
+    outs = [_decode_block_dense(dense[i], rates[i], vals)
+            for i in range(nblocks)]
     return jnp.concatenate(outs, axis=0)
+
+
+def decode_pages(bufs: jnp.ndarray, rates: jnp.ndarray,
+                 cfg: PoolConfig) -> jnp.ndarray:
+    """Batched page decompression: (bufs [P, page_bytes], rates [P, B]) ->
+    bf16 [P, vals_per_page]. Kernel path: one fused promote launch over all
+    P*B blocks (unpack + dequant for every rate in one grid pass)."""
+    npages, nblocks = rates.shape
+    vals = cfg.vals_per_page // nblocks
+    if resolve_impl(cfg) == "kernel":
+        from repro.kernels import ops as kops
+        dense = jax.vmap(lambda b, r: _page_dense_blocks(b, r, vals))(
+            bufs, rates)
+        out = kops.qpack_fused_decode(dense.reshape(npages * nblocks, 2 * vals),
+                                      rates.reshape(npages * nblocks))
+        return out.reshape(npages, nblocks * vals)
+    return jax.vmap(lambda b, r: _decode_page_jnp(b, r, cfg))(bufs, rates)
+
+
+def decode_page(buf: jnp.ndarray, rates: jnp.ndarray, cfg: PoolConfig) -> jnp.ndarray:
+    """Decompress all blocks of a page buffer back to bf16 values."""
+    if resolve_impl(cfg) == "kernel":
+        return decode_pages(buf[None], rates[None], cfg)[0]
+    return _decode_page_jnp(buf, rates, cfg)
 
 
 def decode_block(buf: jnp.ndarray, rates: jnp.ndarray, idx: jnp.ndarray,
@@ -202,6 +298,19 @@ def dequantize_blocks(codes: jnp.ndarray, scales: jnp.ndarray, bits: int,
     else:
         raise ValueError(f"bits={bits}")
     return dequantize_block(q, scales, dtype).reshape(lead + (nb * block,))
+
+
+def quantize_blocks_fast(x: jnp.ndarray, bits: int, block: int,
+                         impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``quantize_blocks`` with an impl switch: "kernel" routes through the
+    Pallas qpack encode kernel (bit-identical to the jnp path), "jnp" stays
+    pure jnp, "auto" picks kernel only on TPU."""
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+        return kops.qpack_encode(x, bits=bits, block=block)
+    return quantize_blocks(x, bits, block)
 
 
 def page_compressed_bytes(rates: jnp.ndarray, vals_per_block: int) -> jnp.ndarray:

@@ -306,13 +306,140 @@ def demote_one(pool: Pool, cfg: PoolConfig, policy: Policy, force=False) -> Pool
     return jax.lax.cond(have, do_demote, lambda p: p, pool)
 
 
+def _use_batched_demote(cfg: PoolConfig) -> bool:
+    mode = getattr(cfg, "fused_demote", "auto")
+    if mode == "auto":
+        return comp.resolve_impl(cfg) == "kernel"
+    return mode == "on"
+
+
+def demote_batch(pool: Pool, cfg: PoolConfig, policy: Policy,
+                 max_demotes: int, target) -> Pool:
+    """Demote up to ``max_demotes`` victims with ONE batched recompression
+    (a single fused-kernel launch on TPU) instead of a serial ``lax.cond``
+    chain of per-victim ``encode_page`` calls.
+
+    Bit-identical to the serial loop (tests/test_qpack_fused.py): phase 1
+    replays victim selection serially (activity/hand/rng/pfree evolve in the
+    exact serial order — demote bodies never touch them), phase 2 recompresses
+    all dirty victims in one ``encode_pages`` call (victims are distinct, so
+    per-victim meta/p_store reads see the same values the serial loop reads),
+    and phase 3 applies the metadata/chunk effects in victim order (cfree/
+    gfree pops in the serial sequence; counters are commutative adds)."""
+    # -- phase 1: victim selection + P-chunk release, serial semantics -------
+    def sel_step(p: Pool, _):
+        def select(p: Pool):
+            rng, sub = jax.random.split(p.rng)
+            res = policy.select_victim(p.activity, p.hand, p.cache, sub,
+                                       force=False)
+            counters = policy.charge_activity(
+                p.counters, C_ACT_RD, res.groups_scanned.astype(CTR_DTYPE))
+            counters = policy.charge_activity(
+                counters, C_ACT_WR, res.groups_scanned.astype(CTR_DTYPE))
+            counters = jax.lax.select(res.used_random,
+                                      bump(counters, C_RANDOM_FB), counters)
+            p = p._replace(activity=res.activity, hand=res.hand, rng=rng,
+                           counters=counters)
+            have = res.victim_ospn >= 0
+            ospn = jnp.maximum(res.victim_ospn, 0)
+            pidx = md.get_ptr(p.meta[ospn], md.PCHUNK_SLOT).astype(jnp.int32)
+
+            def free_slot(q: Pool) -> Pool:
+                return q._replace(pfree=fl.push(q.pfree, pidx),
+                                  activity=act.mark_free(q.activity, pidx))
+
+            p = jax.lax.cond(have, free_slot, lambda q: q, p)
+            return p, jnp.where(have, res.victim_ospn, -1).astype(jnp.int32)
+
+        need = fl.free_count(p.pfree) < target
+        return jax.lax.cond(need, select,
+                            lambda q: (q, jnp.int32(-1)), p)
+
+    pool, victims = jax.lax.scan(sel_step, pool, None, length=max_demotes)
+
+    # -- phase 2: batched recompression of every dirty victim ----------------
+    have = victims >= 0
+    ospns = jnp.maximum(victims, 0)
+    entries = pool.meta[ospns]                       # [K, ENTRY_WORDS]
+    w0s = entries[:, 0]
+    clean = (md.get_dirty(w0s) == 0) & (md.get_shadow_valid(w0s) == 1)
+    pidxs = jax.vmap(lambda e: md.get_ptr(e, md.PCHUNK_SLOT))(
+        entries).astype(jnp.int32)
+    if cfg.store_payload:
+        from repro.core.bitpack import bytes_to_raw
+        safe = jnp.clip(pidxs, 0, max(pool.p_store.shape[0] - 1, 0))
+        vals = jax.vmap(bytes_to_raw)(pool.p_store[safe])
+        bufs, rates, _, nchunks = comp.encode_pages(vals, cfg)
+    else:
+        bufs = jnp.zeros((max_demotes, cfg.page_bytes), jnp.uint8)
+        rates = jax.vmap(lambda o: content_rates(pool, cfg, o))(ospns)
+        nchunks = jax.vmap(lambda r: rates_to_chunks(r, cfg)[1])(rates)
+
+    # -- phase 3: per-victim metadata/chunk effects, in victim order ---------
+    def fin_body(i, p: Pool) -> Pool:
+        ospn = ospns[i]
+        entry = entries[i]
+        w0 = entry[0]
+
+        def demote_clean(p: Pool) -> Pool:
+            nblocks = cfg.blocks_per_page if cfg.coloc else 1
+            raw_sz = 7 if cfg.coloc else RATE_RAW
+            w = w0
+            for j in range(nblocks):
+                bt = md.get_block_type(w, j)
+                sz = md.get_block_sz(w, j)
+                restored = jnp.where(sz == raw_sz, md.BT_INCOMP, md.BT_COMP)
+                w = md.set_block_type(w, j,
+                                      jnp.where(bt == md.BT_PROM, restored, bt))
+            w = md.set_promoted(w, 0)
+            w = md.set_shadow_valid(w, 0)
+            new_entry = entry.at[0].set(w)
+            c = bump(p.counters, C_META_WR, meta_width(cfg, ospn))
+            c = bump(c, C_DEMO_CLEAN)
+            c = policy.on_demotion(c, clean=True)
+            return p._replace(meta=p.meta.at[ospn].set(new_entry), counters=c)
+
+        def demote_dirty(p: Pool) -> Pool:
+            nch = nchunks[i]
+            p, ptrs, is_group = alloc_chunks(p, cfg, nch)
+            p = _scatter_page_buf(p, cfg, bufs[i], ptrs, nch, is_group)
+            w = md.header_from_rates(rates[i]) if cfg.coloc else \
+                _header_4kb(rates[i][0], nch)
+            w = md.set_num_chunks(w, nch)
+            new_entry = md.empty_entry().at[0].set(w)
+            for j in range(7):
+                new_entry = md.set_ptr(new_entry, j, jnp.maximum(ptrs[j], 0))
+            c = policy.charge_migration(p.counters, C_DEMO_RD,
+                                        cfg.page_bytes // 64)
+            c = policy.charge_migration(
+                c, C_DEMO_WR, (nch * (cfg.chunk_bytes // 64)).astype(CTR_DTYPE))
+            c = bump(c, C_META_WR, meta_width(cfg, ospn))
+            c = bump(c, C_DEMO_DIRTY)
+            c = policy.on_compress_store(c)
+            c = policy.on_demotion(c, clean=False)
+            return p._replace(meta=p.meta.at[ospn].set(new_entry), counters=c)
+
+        def apply(p: Pool) -> Pool:
+            return jax.lax.cond(clean[i], demote_clean, demote_dirty, p)
+
+        return jax.lax.cond(have[i], apply, lambda q: q, p)
+
+    return jax.lax.fori_loop(0, max_demotes, fin_body, pool)
+
+
 def demote_if_needed(pool: Pool, cfg: PoolConfig, policy: Policy,
                      max_demotes: int = 2, watermark: int = 0) -> Pool:
     """Keep >= watermark free P-chunks (the paper's background engine, amortized
     into the request path: at most ``max_demotes`` per host op). ``watermark``
     overrides ``cfg.demote_watermark`` when > 0 — the batched front-end tops
-    up to a higher target once per window instead of checking per access."""
+    up to a higher target once per window instead of checking per access.
+
+    With ``cfg.fused_demote`` resolved on (or "auto" on TPU) the victims are
+    recompressed by one batched kernel launch (``demote_batch``) instead of a
+    serial chain of per-victim encodes."""
     target = watermark or cfg.demote_watermark
+    if max_demotes > 1 and _use_batched_demote(cfg):
+        return demote_batch(pool, cfg, policy, max_demotes, target)
 
     def body(i, p):
         need = fl.free_count(p.pfree) < target

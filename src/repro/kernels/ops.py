@@ -3,7 +3,9 @@
 ``INTERPRET`` defaults to True off-TPU (this container validates kernels with
 the Pallas interpreter); on a real TPU backend the compiled kernels run. The
 wrappers also adapt shapes to/from the flat layouts used elsewhere
-(core.compressor.quantize_blocks et al.).
+(core.compressor.quantize_blocks et al.): blocks smaller than a 256-value
+row are grouped (e.g. four 64-value head-dim blocks per row) so the kernels
+always see lane-aligned rows.
 """
 from __future__ import annotations
 
@@ -16,40 +18,101 @@ from repro.kernels import qpack as _qp
 
 INTERPRET = jax.default_backend() != "tpu"
 
+_ROW = 256   # minimum kernel row width (nibble pairs stay lane-aligned)
 
-def qpack_encode(x: jnp.ndarray, bits: int = 4, block: int = 512):
+
+def _row_blocks(block: int) -> int:
+    """Blocks grouped per kernel row (1 for block >= 256)."""
+    if block % _ROW == 0:
+        return 1
+    assert _ROW % block == 0 and block % 2 == 0, block
+    return _ROW // block
+
+
+def qpack_encode(x: jnp.ndarray, bits: int = 4, block: int = 512,
+                 interpret: bool | None = None):
     """x[..., N] -> (codes uint8[..., N*bits/8], scales f32[..., N/block]).
     Shape-compatible with core.compressor.quantize_blocks."""
+    if interpret is None:
+        interpret = INTERPRET
     lead = x.shape[:-1]
     n = x.shape[-1]
     nblk = n // block
     total_blocks = int(jnp.prod(jnp.asarray(lead + (nblk,)))) if lead else nblk
-    # pad block count to the kernel tile
-    pad = (-total_blocks) % _qp.TILE
+    rb = _row_blocks(block)
+    # pad block count to whole kernel tiles of whole rows
+    pad = (-total_blocks) % (_qp.TILE * rb)
     x2 = x.reshape(total_blocks, block)
     if pad:
         x2 = jnp.concatenate([x2, jnp.zeros((pad, block), x.dtype)], axis=0)
-    codes, scales = _qp.qpack_encode_2d(x2, bits=bits, interpret=INTERPRET)
-    codes = codes[:total_blocks].reshape(lead + (n * bits // 8,))
-    scales = scales[:total_blocks, 0].reshape(lead + (nblk,))
+    rows = (total_blocks + pad) // rb
+    codes, scales = _qp.qpack_encode_2d(x2.reshape(rows, rb * block),
+                                        bits=bits, block=block,
+                                        interpret=interpret)
+    codes = codes.reshape(rows * rb, block * bits // 8)[:total_blocks]
+    codes = codes.reshape(lead + (n * bits // 8,))
+    scales = scales.reshape(rows * rb)[:total_blocks].reshape(lead + (nblk,))
     return codes, scales
 
 
 def qpack_decode(codes: jnp.ndarray, scales: jnp.ndarray, bits: int = 4,
-                 block: int = 512, dtype=jnp.bfloat16) -> jnp.ndarray:
+                 block: int = 512, dtype=jnp.bfloat16,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = INTERPRET
     lead = scales.shape[:-1]
     nblk = scales.shape[-1]
     bp = block * bits // 8
     total_blocks = int(jnp.prod(jnp.asarray(lead + (nblk,)))) if lead else nblk
-    pad = (-total_blocks) % _qp.TILE
+    rb = _row_blocks(block)
+    pad = (-total_blocks) % (_qp.TILE * rb)
     c2 = codes.reshape(total_blocks, bp)
     s2 = scales.reshape(total_blocks, 1)
     if pad:
         c2 = jnp.concatenate([c2, jnp.zeros((pad, bp), jnp.uint8)], axis=0)
         s2 = jnp.concatenate([s2, jnp.ones((pad, 1), jnp.float32)], axis=0)
-    x = _qp.qpack_decode_2d(c2, s2, bits=bits, out_dtype=dtype,
-                            interpret=INTERPRET)
-    return x[:total_blocks].reshape(lead + (nblk * block,))
+    rows = (total_blocks + pad) // rb
+    x = _qp.qpack_decode_2d(c2.reshape(rows, rb * bp),
+                            s2.reshape(rows, rb), bits=bits, block=block,
+                            out_dtype=dtype, interpret=interpret)
+    x = x.reshape(rows * rb, block)[:total_blocks]
+    return x.reshape(lead + (nblk * block,))
+
+
+def qpack_fused_encode(x: jnp.ndarray, *, tol4: float = 0.10,
+                       tol8: float = 0.01, lossless: bool = False,
+                       zero_elision: bool = True,
+                       quanta: tuple = (0, 3, 5, 8),
+                       interpret: bool | None = None):
+    """Fused demote over blocks x [T, V]: pads T to the kernel tile and
+    returns (dense uint8[T, 2V], rates int32[T], quanta int32[T])."""
+    if interpret is None:
+        interpret = INTERPRET
+    t, v = x.shape
+    pad = (-t) % _qp.TILE
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, v), x.dtype)], axis=0)
+    dense, rates, qnt = _qp.qpack_fused_encode_2d(
+        x, tol4=tol4, tol8=tol8, lossless=lossless,
+        zero_elision=zero_elision, quanta=tuple(quanta),
+        interpret=interpret)
+    return dense[:t], rates[:t], qnt[:t]
+
+
+def qpack_fused_decode(dense: jnp.ndarray, rates: jnp.ndarray, *,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Fused promote over dense blocks [T, 2V] + rates [T] -> bf16 [T, V]."""
+    if interpret is None:
+        interpret = INTERPRET
+    t, nb = dense.shape
+    pad = (-t) % _qp.TILE
+    if pad:
+        dense = jnp.concatenate(
+            [dense, jnp.zeros((pad, nb), jnp.uint8)], axis=0)
+        rates = jnp.concatenate(
+            [rates, jnp.zeros((pad,), rates.dtype)], axis=0)
+    out = _qp.qpack_fused_decode_2d(dense, rates, interpret=interpret)
+    return out[:t]
 
 
 def kvc_decode_attention(q, k_codes, k_scales, v_codes, v_scales, lengths, *,

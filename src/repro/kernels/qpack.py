@@ -5,6 +5,23 @@ On TPU we replace the LZ77 sequential matcher with rate-adaptive quantization
 (DESIGN.md §3): a VPU-friendly reduction (block amax) + elementwise quantize +
 nibble pack. Tiling: ``TILE`` blocks per grid step; each block of ``B`` values
 is one VMEM row, hardware-aligned when B is a multiple of 128 (lane width).
+
+Two kernel families:
+
+  * ``qpack_encode_2d``/``qpack_decode_2d`` — fixed-rate quantize+pack (the
+    KV-cache / optimizer-state fast path). ``block`` may subdivide a row
+    (e.g. rows of 256 values holding four 64-value head-dim blocks) so small
+    blocks still fill the 128-lane VPU.
+  * ``qpack_fused_encode_2d``/``qpack_fused_decode_2d`` — the demotion /
+    promotion engine: per-block rate selection (zero-detect + amax ->
+    {zero, 4-bit, 8-bit, raw}, CRAM/BDI-style) + quantize + nibble-pack +
+    quanta-size emit in ONE grid pass, producing the dense per-block byte
+    layout of ``core.compressor._encode_block_dense`` bit-for-bit. The jnp
+    compressor remains the bit-identity oracle (tests/test_qpack_fused.py).
+
+``interpret=None`` auto-detects the backend: compiled kernels on TPU,
+the Pallas interpreter elsewhere (satellite fix — the old default forced
+interpret mode even on TPU). Pass an explicit bool to override.
 """
 from __future__ import annotations
 
@@ -15,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.bitpack import RATE_4BIT, RATE_8BIT, RATE_RAW, RATE_ZERO
+
 TILE = 8  # blocks per grid step
 
 
@@ -22,74 +41,273 @@ def _qmax(bits: int) -> float:
     return float(2 ** (bits - 1) - 1)
 
 
-def _encode_kernel(x_ref, codes_ref, scales_ref, *, bits: int):
-    x = x_ref[...].astype(jnp.float32)                 # [TILE, B]
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)  # [TILE, 1]
+def resolve_interpret(interpret) -> bool:
+    """None -> interpret only off-TPU (compiled kernels on real hardware)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _f32_rowbytes(s: jnp.ndarray) -> jnp.ndarray:
+    """f32 [T, 1] -> uint8 [T, 4] little-endian (common.utils.f32_to_bytes)."""
+    u = jax.lax.bitcast_convert_type(s, jnp.uint32)
+    parts = [((u >> jnp.uint32(k)) & jnp.uint32(0xFF)).astype(jnp.uint8)
+             for k in (0, 8, 16, 24)]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def _quantize_rows(xf: jnp.ndarray, bits: int):
+    """The oracle's reciprocal-multiply quantization (core.bitpack
+    .quantize_block) on [T, B] rows: (codes int32, scale f32[T, 1])."""
+    qmax = _qmax(bits)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax * jnp.float32(1.0 / qmax), 1.0)
+    recip = jnp.float32(1.0) / scale
+    q = jnp.clip(jnp.round(xf * recip), -qmax - 1, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def _encode_kernel(x_ref, codes_ref, scales_ref, *, bits: int, block: int):
+    x = x_ref[...].astype(jnp.float32)                  # [TILE, B]
+    t, b = x.shape
+    g = b // block
+    xg = x.reshape(t, g, block)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)  # [TILE, g, 1]
     # reciprocal multiplies keep this bit-identical to the ref oracle
     scale = jnp.where(amax > 0, amax * jnp.float32(1.0 / _qmax(bits)), 1.0)
     recip = jnp.float32(1.0) / scale
-    q = jnp.clip(jnp.round(x * recip), -_qmax(bits) - 1, _qmax(bits))
-    q = q.astype(jnp.int32)
+    q = jnp.clip(jnp.round(xg * recip), -_qmax(bits) - 1, _qmax(bits))
+    q = q.astype(jnp.int32).reshape(t, b)
     if bits == 4:
+        # block is even, so nibble pairs never straddle a sub-block boundary
         u = (q & 0xF).astype(jnp.uint8)
         codes_ref[...] = u[:, 0::2] | (u[:, 1::2] << jnp.uint8(4))
     else:
         codes_ref[...] = (q & 0xFF).astype(jnp.uint8)
-    scales_ref[...] = scale
+    scales_ref[...] = scale[..., 0]
 
 
-def _decode_kernel(codes_ref, scales_ref, o_ref, *, bits: int):
+def _decode_kernel(codes_ref, scales_ref, o_ref, *, bits: int, block: int):
     c = codes_ref[...]                                  # [TILE, Bp]
-    scale = scales_ref[...]                             # [TILE, 1]
+    scale = scales_ref[...]                             # [TILE, G]
     if bits == 4:
         lo = (c & jnp.uint8(0xF)).astype(jnp.int32)
         hi = (c >> jnp.uint8(4)).astype(jnp.int32)
-        lo = jnp.where(lo >= 8, lo - 16, lo)
-        hi = jnp.where(hi >= 8, hi - 16, hi)
         q = jnp.stack([lo, hi], axis=-1).reshape(c.shape[0], c.shape[1] * 2)
+        q = jnp.where(q >= 8, q - 16, q)
     else:
         q = c.astype(jnp.int8).astype(jnp.int32)
-    o_ref[...] = (q.astype(jnp.float32) * scale).astype(o_ref.dtype)
+    t, b = q.shape
+    qg = q.reshape(t, b // block, block)
+    og = qg.astype(jnp.float32) * scale[..., None]
+    o_ref[...] = og.reshape(t, b).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
-def qpack_encode_2d(x: jnp.ndarray, *, bits: int = 4,
-                    interpret: bool = True):
-    """x [N, B] -> (codes uint8[N, B*bits/8], scales f32[N, 1]).
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def qpack_encode_2d(x: jnp.ndarray, *, bits: int = 4, block: int | None = None,
+                    interpret: bool | None = None):
+    """x [N, B] -> (codes uint8[N, B*bits/8], scales f32[N, B/block]).
 
     N must be a multiple of TILE; B a multiple of 256 (nibble pairs stay
-    lane-aligned)."""
+    lane-aligned). ``block`` (default B) subdivides each row into
+    independently-scaled blocks; it must divide B and be even."""
+    interpret = resolve_interpret(interpret)
     n, b = x.shape
+    block = block or b
     assert n % TILE == 0 and b % 256 == 0, (n, b)
+    assert b % block == 0 and block % 2 == 0, (b, block)
+    g = b // block
     bp = b * bits // 8
     grid = (n // TILE,)
     codes, scales = pl.pallas_call(
-        functools.partial(_encode_kernel, bits=bits),
+        functools.partial(_encode_kernel, bits=bits, block=block),
         grid=grid,
         in_specs=[pl.BlockSpec((TILE, b), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((TILE, bp), lambda i: (i, 0)),
-                   pl.BlockSpec((TILE, 1), lambda i: (i, 0))],
+                   pl.BlockSpec((TILE, g), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((n, bp), jnp.uint8),
-                   jax.ShapeDtypeStruct((n, 1), jnp.float32)],
+                   jax.ShapeDtypeStruct((n, g), jnp.float32)],
         interpret=interpret,
     )(x)
     return codes, scales
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "out_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bits", "block", "out_dtype",
+                                             "interpret"))
 def qpack_decode_2d(codes: jnp.ndarray, scales: jnp.ndarray, *, bits: int = 4,
-                    out_dtype=jnp.bfloat16, interpret: bool = True):
-    """(codes uint8[N, Bp], scales f32[N, 1]) -> x [N, B]."""
+                    block: int | None = None, out_dtype=jnp.bfloat16,
+                    interpret: bool | None = None):
+    """(codes uint8[N, Bp], scales f32[N, G]) -> x [N, B]."""
+    interpret = resolve_interpret(interpret)
     n, bp = codes.shape
     b = bp * 8 // bits
-    assert n % TILE == 0, n
+    g = scales.shape[1]
+    block = block or b
+    assert n % TILE == 0 and b == g * block, (n, b, g, block)
     grid = (n // TILE,)
     return pl.pallas_call(
-        functools.partial(_decode_kernel, bits=bits),
+        functools.partial(_decode_kernel, bits=bits, block=block),
         grid=grid,
         in_specs=[pl.BlockSpec((TILE, bp), lambda i: (i, 0)),
-                  pl.BlockSpec((TILE, 1), lambda i: (i, 0))],
+                  pl.BlockSpec((TILE, g), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((TILE, b), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, b), out_dtype),
         interpret=interpret,
     )(codes, scales)
+
+
+# ---------------------------------------------------------------------------
+# Fused demote / promote kernels (rate-adaptive engine, DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+def _fused_encode_kernel(x_ref, dense_ref, rates_ref, quanta_ref, *,
+                         tol4: float, tol8: float, lossless: bool,
+                         zero_elision: bool, qtab):
+    x = x_ref[...]                                      # [TILE, V]
+    xf = x.astype(jnp.float32)
+    t, v = xf.shape
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)  # [TILE, 1]
+    q4, s4 = _quantize_rows(xf, 4)
+    q8, s8 = _quantize_rows(xf, 8)
+    deq4 = (q4.astype(jnp.float32) * s4).astype(jnp.bfloat16)
+    deq8 = (q8.astype(jnp.float32) * s8).astype(jnp.bfloat16)
+    xb = x.astype(jnp.bfloat16)
+
+    # rate selection — formula-for-formula core.compressor.select_rate
+    if lossless:
+        ok4 = jnp.all(deq4 == xb, axis=-1, keepdims=True)
+        ok8 = jnp.all(deq8 == xb, axis=-1, keepdims=True)
+    else:
+        err4 = jnp.max(jnp.abs(deq4.astype(jnp.float32) - xf), axis=-1,
+                       keepdims=True)
+        err8 = jnp.max(jnp.abs(deq8.astype(jnp.float32) - xf), axis=-1,
+                       keepdims=True)
+        safe = jnp.where(amax > 0, amax, 1.0)
+        ok4 = err4 / safe <= tol4
+        ok8 = err8 / safe <= tol8
+    rate = jnp.where(ok8, RATE_8BIT, RATE_RAW)
+    rate = jnp.where(ok4, RATE_4BIT, rate)
+    rate = jnp.where(amax == 0, RATE_ZERO, rate)
+    rate = rate.astype(jnp.int32)                        # [TILE, 1]
+    if not zero_elision:
+        rate = jnp.maximum(rate, RATE_4BIT)
+
+    # quanta emit (static 4-entry table -> where chain, no in-kernel gather)
+    quanta = jnp.where(rate == RATE_ZERO, qtab[0],
+                       jnp.where(rate == RATE_4BIT, qtab[1],
+                                 jnp.where(rate == RATE_8BIT, qtab[2],
+                                           qtab[3]))).astype(jnp.int32)
+
+    # dense candidate layouts (core.compressor._encode_block_dense):
+    #   4-bit: f32 scale bytes | packed nibbles | zero pad
+    #   8-bit: f32 scale bytes | int8 bytes     | zero pad
+    #   raw  : little-endian bf16 bytes
+    nb = 2 * v
+    u4 = (q4 & 0xF).astype(jnp.uint8)
+    p4 = u4[:, 0::2] | (u4[:, 1::2] << jnp.uint8(4))
+    c4 = jnp.concatenate(
+        [_f32_rowbytes(s4), p4, jnp.zeros((t, nb - 4 - v // 2), jnp.uint8)],
+        axis=1)
+    p8 = (q8 & 0xFF).astype(jnp.uint8)
+    c8 = jnp.concatenate(
+        [_f32_rowbytes(s8), p8, jnp.zeros((t, nb - 4 - v), jnp.uint8)],
+        axis=1)
+    u16 = jax.lax.bitcast_convert_type(xb, jnp.uint16)
+    lo = (u16 & jnp.uint16(0xFF)).astype(jnp.uint8)
+    hi = (u16 >> jnp.uint16(8)).astype(jnp.uint8)
+    raw = jnp.stack([lo, hi], axis=-1).reshape(t, nb)
+
+    dense = jnp.where(rate == RATE_4BIT, c4, jnp.zeros((t, nb), jnp.uint8))
+    dense = jnp.where(rate == RATE_8BIT, c8, dense)
+    dense = jnp.where(rate == RATE_RAW, raw, dense)
+    dense_ref[...] = dense
+    rates_ref[...] = rate
+    quanta_ref[...] = quanta
+
+
+def _fused_decode_kernel(dense_ref, rates_ref, o_ref):
+    d = dense_ref[...]                                  # [TILE, 2V] uint8
+    rate = rates_ref[...]                               # [TILE, 1] int32
+    t, nb = d.shape
+    v = nb // 2
+    # per-row f32 scale from the first 4 bytes (common.utils.bytes_to_f32)
+    q32 = d[:, 0:4].astype(jnp.uint32)
+    u = q32[:, 0:1] | (q32[:, 1:2] << 8) | (q32[:, 2:3] << 16) | \
+        (q32[:, 3:4] << 24)
+    scale = jax.lax.bitcast_convert_type(u.astype(jnp.uint32), jnp.float32)
+    # 4-bit: sign-extended nibbles (core.bitpack.unpack4)
+    c4 = d[:, 4:4 + v // 2]
+    lo = (c4 & jnp.uint8(0xF)).astype(jnp.int8)
+    hi = (c4 >> jnp.uint8(4)).astype(jnp.int8)
+    qn = jnp.stack([lo, hi], axis=-1).reshape(t, v)
+    qn = jnp.where(qn >= 8, qn - 16, qn)
+    out4 = (qn.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+    # 8-bit: bit-identity int8 (core.bitpack.unpack8)
+    q8 = jax.lax.bitcast_convert_type(d[:, 4:4 + v], jnp.int8)
+    out8 = (q8.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+    # raw: little-endian bf16 (core.bitpack.bytes_to_raw)
+    pairs = d.reshape(t, v, 2).astype(jnp.uint16)
+    u16 = pairs[..., 0] | (pairs[..., 1] << jnp.uint16(8))
+    raw = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+
+    out = jnp.where(rate == RATE_4BIT, out4,
+                    jnp.zeros((t, v), jnp.bfloat16))
+    out = jnp.where(rate == RATE_8BIT, out8, out)
+    out = jnp.where(rate == RATE_RAW, raw, out)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("tol4", "tol8", "lossless",
+                                             "zero_elision", "quanta",
+                                             "interpret"))
+def qpack_fused_encode_2d(x: jnp.ndarray, *, tol4: float = 0.10,
+                          tol8: float = 0.01, lossless: bool = False,
+                          zero_elision: bool = True,
+                          quanta: tuple = (0, 3, 5, 8),
+                          interpret: bool | None = None):
+    """Fused demote kernel: blocks x [N, V] (bf16/f32 values) ->
+    (dense uint8[N, 2V], rates int32[N], quanta int32[N]) in one grid pass.
+
+    ``dense`` rows are byte-identical to ``_encode_block_dense``; ``quanta``
+    is the static per-rate size table (core.compressor.block_quanta_table).
+    N must be a multiple of TILE; V a multiple of 128."""
+    interpret = resolve_interpret(interpret)
+    n, v = x.shape
+    assert n % TILE == 0 and v % 128 == 0, (n, v)
+    grid = (n // TILE,)
+    dense, rates, qnt = pl.pallas_call(
+        functools.partial(_fused_encode_kernel, tol4=tol4, tol8=tol8,
+                          lossless=lossless, zero_elision=zero_elision,
+                          qtab=tuple(quanta)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, v), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE, 2 * v), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, 2 * v), jnp.uint8),
+                   jax.ShapeDtypeStruct((n, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((n, 1), jnp.int32)],
+        interpret=interpret,
+    )(x)
+    return dense, rates[:, 0], qnt[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qpack_fused_decode_2d(dense: jnp.ndarray, rates: jnp.ndarray, *,
+                          interpret: bool | None = None):
+    """Fused promote kernel: (dense uint8[N, 2V], rates int32[N]) ->
+    bf16 [N, V] (unpack + dequant for all four rates in one pass)."""
+    interpret = resolve_interpret(interpret)
+    n, nb = dense.shape
+    v = nb // 2
+    assert n % TILE == 0 and v % 128 == 0, (n, v)
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        _fused_decode_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, nb), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v), jnp.bfloat16),
+        interpret=interpret,
+    )(dense, rates.reshape(n, 1).astype(jnp.int32))

@@ -62,7 +62,7 @@ import numpy as np
 
 from repro.common.types import ModelConfig, ServeConfig
 from repro.common.utils import next_pow2 as _next_pow2
-from repro.core.compressor import quantize_blocks
+from repro.core.compressor import quantize_blocks_fast
 from repro.core.engine.policy import SecondChanceLanes
 from repro.models import decode as D
 from repro.models import transformer as T
@@ -128,14 +128,16 @@ def _prefill_impl(params, batch, lens, *, cfg: ModelConfig, scfg: ServeConfig,
     return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
 
-def _ring_to_codes(codes, scales, hot, cold_len, pos, W: int, bits: int):
+def _ring_to_codes(codes, scales, hot, cold_len, pos, W: int, bits: int,
+                   impl: str = "auto"):
     """Quantize the live ring tokens (positions [max(cold_len, pos-W), pos))
     into the codes region — the device half of a lane demotion. Mirrors the
     streaming eviction in ``models/decode._evict_to_codes`` but for the whole
-    ring at once. codes [Lyr,T,...], scales [Lyr,T,...], hot [Lyr,W,...,D]."""
+    ring at once. codes [Lyr,T,...], scales [Lyr,T,...], hot [Lyr,W,...,D].
+    ``impl`` routes the quantize through the Pallas qpack kernel on TPU."""
     T_ = codes.shape[1]
     D_ = hot.shape[-1]
-    c, s = quantize_blocks(hot.astype(jnp.float32), bits, D_)
+    c, s = quantize_blocks_fast(hot.astype(jnp.float32), bits, D_, impl=impl)
     t = jnp.arange(T_)
     sel = (t[None, :] >= cold_len[:, None]) & (t[None, :] >= pos - W) & \
         (t[None, :] < pos)                                     # [Lyr, T]
@@ -153,18 +155,19 @@ def _demote_lane_impl(lane_cache, pos, *, scfg: ServeConfig):
     becomes dead weight (dropped by the host before parking). SSM state has
     no compressed form and passes through raw (counted honestly)."""
     W, bits = scfg.hot_window, scfg.kv_rate_bits
+    impl = getattr(scfg, "quantize_impl", "auto")
     out = dict(lane_cache)
     if "k_codes" in out:
         out["k_codes"], out["k_scales"] = _ring_to_codes(
             out["k_codes"], out["k_scales"], out["k_hot"], out["cold_len"],
-            pos, W, bits)
+            pos, W, bits, impl)
         out["v_codes"], out["v_scales"] = _ring_to_codes(
             out["v_codes"], out["v_scales"], out["v_hot"], out["cold_len"],
-            pos, W, bits)
+            pos, W, bits, impl)
     if "lat_codes" in out:
         out["lat_codes"], out["lat_scales"] = _ring_to_codes(
             out["lat_codes"], out["lat_scales"], out["lat_hot"],
-            out["cold_len"], pos, W, bits)
+            out["cold_len"], pos, W, bits, impl)
     if "cold_len" in out:
         out["cold_len"] = jnp.maximum(out["cold_len"], pos)
     return out

@@ -36,6 +36,8 @@ sync costs one CXL round trip.
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, NamedTuple, Sequence, Union
 
@@ -79,6 +81,40 @@ DEVICE_PROFILES: Dict[str, DeviceConfig] = {
     "slow_engine": DeviceConfig(clock=1.0e9, comp_cycles=512,
                                 decomp_cycles=128),
 }
+
+# Default location of the measured-kernel bench artifact (repo root; written
+# by benchmarks/kernel_bench.py).
+_BENCH_KERNELS = pathlib.Path(__file__).resolve().parents[3] / "BENCH_kernels.json"
+
+
+def calibrated_device(path: "str | pathlib.Path | None" = None,
+                      base: "DeviceConfig | None" = None) -> DeviceConfig:
+    """DeviceConfig whose compression-engine constants are derived from the
+    measured kernel throughput in ``BENCH_kernels.json`` instead of the
+    paper's assumed 256/64 cycles per block.
+
+    cycles/block = clock * block_bytes / measured_bytes_per_second, i.e. the
+    engine is modeled at exactly the GB/s the fused demote/promote kernels
+    sustained on this host (benchmarks/kernel_bench.py 'calibration'
+    section). Falls back to the paper constants (``base``) when the bench
+    file is missing or lacks the calibration section, so delivered-time
+    behavior never silently depends on an uncommitted artifact."""
+    base = base if base is not None else DeviceConfig()
+    p = pathlib.Path(path) if path is not None else _BENCH_KERNELS
+    try:
+        data = json.loads(p.read_text())
+    except (OSError, ValueError):
+        return base
+    cal = data.get("calibration", {})
+    comp_gbps = cal.get("compress_gbps")
+    decomp_gbps = cal.get("decompress_gbps")
+    if not comp_gbps or not decomp_gbps:
+        return base
+    blk = float(cal.get("block_bytes", 1024))
+    comp_cycles = max(1, int(round(base.clock * blk / (comp_gbps * 1e9))))
+    decomp_cycles = max(1, int(round(base.clock * blk / (decomp_gbps * 1e9))))
+    return dataclasses.replace(base, comp_cycles=comp_cycles,
+                               decomp_cycles=decomp_cycles)
 
 
 class DeviceLanes(NamedTuple):
