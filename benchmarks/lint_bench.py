@@ -1,0 +1,71 @@
+"""Hygiene stamp for bench runs: the same lint invocation CI runs
+(``python -m repro.analysis.lint src --baseline
+src/repro/analysis/baseline.json``) executed as a bench suite, so every
+BENCH_*.json produced by a run records whether the code it measured
+honored the tracing/host-sync contracts.
+
+Writes ``BENCH_lint.json`` and injects a compact ``meta.lint`` stamp
+into every sibling BENCH_*.json present at the repo root (the suite runs
+LAST in ``benchmarks.run`` for exactly this reason). Raises on new
+findings so ``--only lint`` fails the same way the CI step does.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+JSON_PATH = ROOT / "BENCH_lint.json"
+BASELINE = ROOT / "src" / "repro" / "analysis" / "baseline.json"
+
+
+def _stamp(report: dict) -> dict:
+    c = report["counts"]
+    return {"ok": report["ok"], "new": c["new"], "active": c["active"],
+            "grandfathered": c["grandfathered"],
+            "suppressed_host_ok": c["suppressed"],
+            "stale_baseline": c["stale_baseline"]}
+
+
+def run(quick: bool, seed: int = 0) -> List[Dict]:
+    from repro.analysis.lint import run_lint
+
+    t0 = time.perf_counter()
+    report = run_lint([str(ROOT / "src")], baseline_path=BASELINE)
+    report.pop("_findings", None)
+    dt_us = (time.perf_counter() - t0) * 1e6
+
+    stamp = _stamp(report)
+    payload = {"meta": {"files": report["files"],
+                        "baseline": "src/repro/analysis/baseline.json",
+                        "by_rule": report["by_rule"], **stamp},
+               "new": report["new"],
+               "stale_baseline": report["stale_baseline"],
+               "suppressed": report["suppressed"]}
+    JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+    # stamp every sibling bench JSON from this run with the verdict
+    for bench in sorted(ROOT.glob("BENCH_*.json")):
+        if bench == JSON_PATH:
+            continue
+        try:
+            data = json.loads(bench.read_text())
+        except (ValueError, OSError):
+            continue
+        if isinstance(data, dict):
+            data.setdefault("meta", {})["lint"] = stamp
+            bench.write_text(json.dumps(data, indent=2, sort_keys=True)
+                             + "\n")
+
+    rows = [{"name": "lint_src", "us": dt_us,
+             "derived": (f"files={report['files']} new={stamp['new']} "
+                         f"active={stamp['active']} "
+                         f"suppressed={stamp['suppressed_host_ok']} "
+                         f"ok={stamp['ok']}")}]
+    if not report["ok"]:
+        raise RuntimeError(
+            f"jit-hygiene lint failed: {stamp['new']} new finding(s) — "
+            f"see BENCH_lint.json")
+    return rows

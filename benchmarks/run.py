@@ -25,8 +25,9 @@ def main() -> None:
     quick = not args.full
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
-    from benchmarks import (fabric_bench, kernel_bench, paper_figs,
-                            serve_bench, simx_bench, system_bench)
+    from benchmarks import (fabric_bench, kernel_bench, lint_bench,
+                            paper_figs, serve_bench, simx_bench,
+                            system_bench)
 
     suites = [(f.__name__, lambda q, s, f=f: f(q)) for f in
               paper_figs.ALL_FIGS]
@@ -40,6 +41,9 @@ def main() -> None:
     suites.append(("serve", serve_bench.run))
     # multi-expander fabric: 1/2/4/8 scaling + skew + parity -> BENCH_fabric.json
     suites.append(("fabric", fabric_bench.run))
+    # jit-hygiene lint over src vs committed baseline -> BENCH_lint.json;
+    # runs LAST so its meta.lint stamp lands in every BENCH_*.json above
+    suites.append(("lint", lint_bench.run))
 
     print("name,us_per_call,derived")
     failed = 0

@@ -106,8 +106,12 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
     tok_s = se.counters["tokens"] / max(dt_s, 1e-9)
     tok_b = be.counters["tokens"] / max(dt_b, 1e-9)
 
-    # host-sync contract: exactly one sync per decode step
-    assert be.counters["step_syncs"] == be.counters["steps"], be.counters
+    # host-sync contract: the measured sync count must match the budget
+    # Engine.step DECLARES via @sync_contract (one sync per decode step) —
+    # not a constant this bench made up
+    from repro.common.contracts import verify_sync_counters
+    verify_sync_counters(Engine.step, be.counters["steps"],
+                         be.counters["step_syncs"], what=str(be.counters))
 
     # fabric-striped run (lanes across 2 expanders; compiled programs are
     # shared with the single-expander engine — n_expanders is scheduling-

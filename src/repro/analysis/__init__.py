@@ -1,0 +1,7 @@
+"""repro.analysis — jit-hygiene static analyzer (DESIGN.md §15).
+
+Stdlib-only AST pass enforcing the repo's tracing and host-sync
+contracts at the source level: ``python -m repro.analysis.lint src
+--baseline src/repro/analysis/baseline.json``.
+"""
+from repro.analysis.core import Finding, ModuleInfo, Region  # noqa: F401

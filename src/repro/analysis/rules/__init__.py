@@ -1,0 +1,23 @@
+"""Rule registry for the jit-hygiene analyzer (DESIGN.md §15).
+
+Each rule is a module exposing ``RULE`` (its id), ``TITLE`` (one-line
+summary used in reports) and ``check(module: ModuleInfo) -> List[Finding]``.
+Adding a rule = adding a module here and appending it to ``ALL_RULES``.
+"""
+from repro.analysis.rules import (
+    r1_hidden_host_sync,
+    r2_recompile_hazard,
+    r3_pytree_order,
+    r4_pallas_hygiene,
+    r5_sync_contract,
+)
+
+ALL_RULES = [
+    r1_hidden_host_sync,
+    r2_recompile_hazard,
+    r3_pytree_order,
+    r4_pallas_hygiene,
+    r5_sync_contract,
+]
+
+RULE_TITLES = {m.RULE: m.TITLE for m in ALL_RULES}

@@ -1,0 +1,37 @@
+"""R1 — hidden host syncs inside jit regions.
+
+The taint walk in ``core`` does the heavy lifting; this rule converts
+its events into findings. Every event category is a construct that, in
+traced code, either concretizes a tracer (forcing a device→host round
+trip per *call*, the per-access cost the host-sync contracts exist to
+amortize) or silently runs at trace time only:
+
+  * ``int()/float()/bool()/complex()`` on a traced value
+  * ``.item()`` on a traced value
+  * ``np.*`` calls with traced arguments (numpy concretizes)
+  * ``jax.device_get`` / ``.block_until_ready()`` in traced code
+  * ``print`` (trace-time only; use ``jax.debug.print``)
+  * Python ``if``/``while`` branching on a traced value (structural
+    tests — ``x is None``, ``"key" in pytree``, ``isinstance``/``len`` —
+    are exempt: they resolve at trace time)
+"""
+from typing import List
+
+from repro.analysis import core
+
+RULE = "R1"
+TITLE = "hidden host sync inside a jit region"
+
+
+def check(module: core.ModuleInfo) -> List[core.Finding]:
+    out: List[core.Finding] = []
+    seen = set()
+    for region in module.regions:
+        for ev in core.taint_events(module, region):
+            key = (getattr(ev.node, "lineno", 0),
+                   getattr(ev.node, "col_offset", 0), ev.category)
+            if key in seen:     # overlapping regions report each site once
+                continue
+            seen.add(key)
+            out.append(module.finding(RULE, ev.node, ev.message))
+    return out

@@ -1,0 +1,112 @@
+"""R2 — recompile hazards on jitted callables.
+
+Jit caches key on static argument *values* and on argument hashability.
+Three syntactically detectable ways to defeat the cache:
+
+  * mutable default arguments (``def f(x, cfg={})``) on a jitted
+    callable — unhashable when they land in a static slot, and a shared
+    mutable cell either way;
+  * ``static_argnames`` naming a parameter that does not exist (jax
+    raises only when the name is *passed*, so a typo can sit dormant
+    until a call site changes);
+  * ``static_argnums`` out of range for the signature;
+  * per-call-varying literals (f-strings, dict/list/set displays) passed
+    as a *static* keyword at a call through a jit-wrapped name — every
+    distinct value is a fresh compile.
+"""
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import core
+
+RULE = "R2"
+TITLE = "recompile hazard on a jitted callable"
+
+_MUTABLE_CALLS = {"dict", "list", "set", "bytearray"}
+_VARYING = (ast.JoinedStr, ast.Dict, ast.List, ast.Set, ast.DictComp,
+            ast.ListComp, ast.SetComp)
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in _MUTABLE_CALLS
+    return False
+
+
+def _jit_assignments(module: core.ModuleInfo) -> Dict[str, dict]:
+    """``name = jax.jit(...)`` bindings (module- or function-local) with
+    any literal static metadata from the jit call."""
+    out: Dict[str, dict] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and core.dotted(node.value.func) in core.JIT_NAMES:
+            meta = core._parse_jit_kwargs(node.value)
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out[tgt.id] = meta
+    return out
+
+
+def check(module: core.ModuleInfo) -> List[core.Finding]:
+    out: List[core.Finding] = []
+
+    for region in module.regions:
+        if region.kind != "jit" or not isinstance(region.node, core.FuncNode):
+            continue
+        node, meta = region.node, region.jit_meta or {}
+        args = node.args
+        # mutable defaults
+        for param, default in _iter_defaults(args):
+            if default is not None and _is_mutable_literal(default):
+                out.append(module.finding(
+                    RULE, default,
+                    f"mutable default `{param}=...` on jitted "
+                    f"`{region.qualname}` — unhashable as a static arg and "
+                    f"a shared cell across traces; default to None"))
+        # static metadata vs signature
+        pos = core.param_names(node)
+        known = set(core.all_param_names(node))
+        for name in meta.get("static_argnames") or ():
+            if name not in known:
+                out.append(module.finding(
+                    RULE, meta.get("node", node),
+                    f"static_argnames references `{name}` which is not a "
+                    f"parameter of `{region.qualname}` — dormant typo, "
+                    f"recompiles (or raises) when a call site passes it"))
+        for num in meta.get("static_argnums") or ():
+            if not (0 <= num < len(pos)):
+                out.append(module.finding(
+                    RULE, meta.get("node", node),
+                    f"static_argnums index {num} is out of range for "
+                    f"`{region.qualname}` ({len(pos)} positional params)"))
+
+    # per-call-varying static kwargs at calls through jit-wrapped names
+    jit_names = _jit_assignments(module)
+    for call in core.iter_calls(module.tree):
+        if not isinstance(call.func, ast.Name):
+            continue
+        meta = jit_names.get(call.func.id)
+        if meta is None:
+            continue
+        static = set(meta.get("static_argnames") or ())
+        for kw in call.keywords:
+            if kw.arg in static and isinstance(kw.value, _VARYING):
+                out.append(module.finding(
+                    RULE, kw.value,
+                    f"per-call-varying literal passed as static arg "
+                    f"`{kw.arg}` to jitted `{call.func.id}` — every distinct "
+                    f"value compiles a fresh executable"))
+    return out
+
+
+def _iter_defaults(args: ast.arguments) -> List[Tuple[str, Optional[ast.AST]]]:
+    pos = args.posonlyargs + args.args
+    pairs: List[Tuple[str, Optional[ast.AST]]] = []
+    for param, default in zip(pos[len(pos) - len(args.defaults):],
+                              args.defaults):
+        pairs.append((param.arg, default))
+    for param, default in zip(args.kwonlyargs, args.kw_defaults):
+        pairs.append((param.arg, default))
+    return pairs

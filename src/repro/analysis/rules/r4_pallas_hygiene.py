@@ -1,0 +1,79 @@
+"""R4 — Pallas launch hygiene.
+
+Two classes of launch-site mistakes detectable from literals:
+
+  * ``interpret=True`` written literally at a ``pl.pallas_call`` site.
+    Interpret mode is a *platform* decision (off-TPU fallback), not a
+    call-site decision — it must route through
+    ``kernels.qpack.resolve_interpret`` so TPU runs never silently
+    execute the python interpreter path (``interpret=False`` literal is
+    equally wrong: it breaks every non-TPU environment).
+  * grid/BlockSpec arity mismatches visible from tuple displays: a
+    BlockSpec ``index_map`` lambda must take one argument per grid axis
+    and return one index per block-shape axis. Wrong arity raises only
+    at trace time on the launching platform; the lint catches it on any
+    machine.
+"""
+import ast
+from typing import List, Optional
+
+from repro.analysis import core
+
+RULE = "R4"
+TITLE = "pallas launch hygiene (interpret literal / BlockSpec arity)"
+
+
+def _tuple_len(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return 1
+    return None
+
+
+def check(module: core.ModuleInfo) -> List[core.Finding]:
+    out: List[core.Finding] = []
+    for call in core.iter_calls(module.tree):
+        if core.dotted(call.func) not in core.PALLAS_NAMES:
+            continue
+        kwargs = {kw.arg: kw.value for kw in call.keywords
+                  if kw.arg is not None}
+
+        interp = kwargs.get("interpret")
+        if isinstance(interp, ast.Constant) and isinstance(interp.value, bool):
+            out.append(module.finding(
+                RULE, interp,
+                f"literal `interpret={interp.value}` at a pallas_call site — "
+                f"route through kernels.qpack.resolve_interpret so the "
+                f"interpreter fallback is a platform decision, not a "
+                f"call-site constant"))
+
+        grid_ndim = _tuple_len(kwargs.get("grid"))
+        for spec in ast.walk(call):
+            if not (isinstance(spec, ast.Call)
+                    and (core.dotted(spec.func) or "").endswith("BlockSpec")):
+                continue
+            spec_args = list(spec.args)
+            spec_kw = {kw.arg: kw.value for kw in spec.keywords
+                       if kw.arg is not None}
+            block_shape = spec_kw.get(
+                "block_shape", spec_args[0] if spec_args else None)
+            index_map = spec_kw.get(
+                "index_map", spec_args[1] if len(spec_args) > 1 else None)
+            if not isinstance(index_map, ast.Lambda):
+                continue
+            n_params = len(core.all_param_names(index_map))
+            if grid_ndim is not None and n_params != grid_ndim:
+                out.append(module.finding(
+                    RULE, index_map,
+                    f"BlockSpec index_map takes {n_params} arg(s) but the "
+                    f"grid has {grid_ndim} axis(es)"))
+            n_block = _tuple_len(block_shape)
+            n_ret = _tuple_len(index_map.body)
+            if n_block is not None and n_ret is not None \
+                    and n_block != n_ret:
+                out.append(module.finding(
+                    RULE, index_map,
+                    f"BlockSpec index_map returns {n_ret} index(es) for a "
+                    f"{n_block}-axis block_shape"))
+    return out

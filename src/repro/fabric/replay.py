@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.contracts import sync_contract
 from repro.common.types import PoolConfig
 from repro.common.utils import next_pow2
 from repro.core.engine import batch as B
@@ -253,25 +254,23 @@ class Fabric:
         self.segments_replayed += 1
         return times, stats, self.pools.counters
 
+    @sync_contract(syncs_per="segment", fetches=1)
     def _fetch_view(self, times, stats, counters,
                     recent: np.ndarray) -> Optional[MG.SegmentView]:
         """The ONE host sync per segment: fused fetch of delivered times,
         migration stats, and the counter snapshot; the replay delta falls
         out against the previous snapshot. With migration off the stats
-        were never computed — only the delta bookkeeping runs and no view
-        is built (no policy would read it)."""
-        if stats is None:
-            ctrs, t = jax.device_get((counters, times))
-            view = None
-        else:
-            stats, ctrs, t = jax.device_get((stats, counters, times))
+        were never computed — ``None`` rides through the single fetch as
+        an empty pytree, only the delta bookkeeping runs and no view is
+        built (no policy would read it)."""
+        stats, ctrs, t = jax.device_get((stats, counters, times))
         self.segment_syncs += 1
         ctrs = np.asarray(ctrs, np.int64)
         delta = ctrs - self._last_counters
         self._last_counters = ctrs
         self.segment_deltas.append(delta)
         if stats is None:
-            return view
+            return None
         self._last_free = np.asarray(stats.free_units, np.int64)
         return MG.SegmentView(free_units=self._last_free,
                               free_singles=np.asarray(stats.free_singles,
@@ -318,6 +317,7 @@ class Fabric:
             jnp.asarray(pages), jnp.asarray(srcs), jnp.asarray(dsts))
         return plan, srcs, dsts, moved
 
+    @sync_contract(syncs_per="epoch", fetches=1)
     def _commit_epoch(self, plan: MG.MigrationPlan, srcs, dsts, moved,
                       overlapping_seg: int,
                       view: Optional[MG.SegmentView] = None,
@@ -336,15 +336,19 @@ class Fabric:
         drain) only the freelist tops ride along — no planner will read
         per-page facts, so none are computed."""
         if view is not None:
-            stats = _stacked_stats(self.pools, self.cfg)
-            moved, ctrs, stats = jax.device_get(
-                (moved, self.pools.counters, stats))
+            extra = _stacked_stats(self.pools, self.cfg)
+        else:
+            # no planner will read per-page facts — only the freelist
+            # tops ride along in the same single fetch
+            extra = (self.pools.cfree.top, self.pools.gfree.top)
+        moved, ctrs, extra = jax.device_get(
+            (moved, self.pools.counters, extra))
+        if view is not None:
+            stats = extra
             free_units = np.asarray(stats.free_units, np.int64)
         else:
             stats = None
-            moved, ctrs, ct, gt = jax.device_get(
-                (moved, self.pools.counters, self.pools.cfree.top,
-                 self.pools.gfree.top))
+            ct, gt = extra
             free_units = (np.asarray(ct, np.int64) +
                           8 * np.asarray(gt, np.int64))
         self.epoch_syncs += 1

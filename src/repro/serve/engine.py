@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.contracts import sync_contract
 from repro.common.types import ModelConfig, ServeConfig
 from repro.common.utils import next_pow2 as _next_pow2
 from repro.core.compressor import quantize_blocks_fast
@@ -576,9 +577,12 @@ class Engine(_EngineBase):
 
     # -- decode step ---------------------------------------------------------
 
+    @sync_contract(syncs_per="step", fetches=1)
     def step(self) -> bool:
         """One engine iteration. Returns False when no work remains.
-        Exactly one host sync per call once lanes are running."""
+        Exactly one host sync per call once lanes are running — declared
+        above and checked both by the R5 lint and by the benches via
+        ``verify_sync_counters`` (step_syncs == steps)."""
         self._admit()
         active = [(lane, rid) for lane, rid in enumerate(self.lane_req)
                   if rid is not None]
