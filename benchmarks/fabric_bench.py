@@ -66,6 +66,7 @@ from repro.core.engine import batch as B
 from repro.core.engine import state as S
 from repro.core.engine.policy import POLICIES
 from repro.fabric import Fabric, StaticInterleave, WeightedInterleave
+from repro.obs import manifest as run_manifest
 from repro.simx import device as DEV
 from repro.simx import time as TM
 from repro.simx.engine import TRAFFIC_KEYS, pool_cfg_for
@@ -360,6 +361,58 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                             f"epochs={fab_over.epochs_applied};"
                             f"depth1=bit-identical"})
 
+    # -- telemetry piggyback A/B (DESIGN.md §16) ------------------------------
+    # the SAME rebalance point replayed with an obs.Recorder attached.
+    # Asserted: pool/counter state is bit-identical to the recording-off
+    # run, the declared sync budgets still hold with the recorder draining
+    # every fetch, the exported Perfetto per-expander track totals
+    # reconcile with pipeline_times (same row matrices, same pricing), and
+    # the trace validates (nesting + monotone timestamps). Wall-clock
+    # overhead is recorded (warm same-run A/B; the ≤5% acceptance number)
+    # rather than hard-asserted — shared-box preemption noise dwarfs it.
+    from repro.obs import Recorder
+    from repro.obs import export as OBX
+    t0 = time.perf_counter()
+    rec = Recorder()
+    t_on0 = time.perf_counter()
+    fab_rec = mk_mig(pipeline_depth=2, obs=rec)
+    fab_rec.replay(ospn, wr, blk)
+    t_on = time.perf_counter() - t_on0
+    t_off0 = time.perf_counter()
+    fab_off = mk_mig(pipeline_depth=2)
+    fab_off.replay(ospn, wr, blk)
+    t_off = time.perf_counter() - t_off0
+    assert fab_rec.state_identical(fab_off), \
+        "recording changed pool/counter state"
+    sync_rec = _sync_contract(fab_rec)     # budgets unchanged, recorder ON
+    pt_rec = fab_rec.pipeline_times()
+    totals = OBX.fabric_track_totals(rec)
+    assert np.allclose(totals["overlapped_s"], pt_rec["overlapped_s"],
+                       rtol=1e-9), "trace totals drifted from pipeline_times"
+    assert np.allclose(totals["sync_s"], pt_rec["sync_s"], rtol=1e-9), \
+        "trace sync totals drifted from pipeline_times"
+    trace = OBX.build_trace(rec)
+    errors = OBX.validate_trace(trace)
+    assert not errors, errors
+    overhead = t_on / max(t_off, 1e-12)
+    obs_ab = {
+        "state_bit_identical": True,
+        "sync": sync_rec,
+        "segments_recorded": len(rec.segments),
+        "epochs_recorded": len(rec.epochs),
+        "plans_recorded": len(rec.plans),
+        "trace_events": len(trace["traceEvents"]),
+        "trace_valid": True,
+        "track_totals_reconcile_pipeline_times": True,
+        "wallclock_overhead_ratio": overhead,
+        "counters": rec.metrics.snapshot()["counters"],
+    }
+    rows.append({"name": "fabric.obs.ab",
+                 "us": (time.perf_counter() - t0) * 1e6,
+                 "derived": f"overhead=x{overhead:.3f};bit_identical=True;"
+                            f"events={len(trace['traceEvents'])};"
+                            f"reconciled=True"})
+
     # -- parity (asserted) ---------------------------------------------------
     fab1 = _fabric(cfg, 1, rates, seed, window, spill=False)
     fab1.replay(ospn, wr, blk)
@@ -403,9 +456,10 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                             f"(tol={MERGED_POOL_TOL})"})
 
     payload = {
-        "meta": {"workload": WL, "n_accesses": n_accesses,
+        "meta": {**run_manifest(seed=seed),
+                 "workload": WL, "n_accesses": n_accesses,
                  "promoted_pages_per_expander": prom, "n_pages": n_pages,
-                 "window": window, "reps": reps, "seed": seed,
+                 "window": window, "reps": reps,
                  "quick": quick,
                  "unit": "accesses/sec; wallclock = simulator steady state "
                          "(compile excluded; vmapped masked branches carry "
@@ -419,6 +473,7 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
         "mixed_fleets": mixed,
         "skew": skew_rows,
         "migration": migration,
+        "obs": obs_ab,
         "parity": {"per_shard_exact": True,
                    "merged_pool_rel_diff": rel,
                    "merged_pool_tolerance": MERGED_POOL_TOL,

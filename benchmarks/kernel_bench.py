@@ -33,6 +33,7 @@ from repro.common.types import PoolConfig
 from repro.common.utils import time_fn
 from repro.core import compressor as comp
 from repro.kernels import ops
+from repro.obs import manifest as run_manifest
 from repro.roofline import analyze as AN
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
@@ -183,7 +184,7 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                             f"cycles_per_1KB={decomp_cycles};paper=64"})
 
     payload = {
-        "meta": {"quick": quick, "seed": seed, "backend": backend,
+        "meta": {**run_manifest(seed=seed), "quick": quick,
                  "kernel_mode": kmode, "calibration_mode": cmode,
                  "unit": "us per call (median); GB/s of uncompressed bytes"},
         "kernels": [{"name": r["name"], "us": r["us"],

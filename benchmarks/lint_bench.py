@@ -38,7 +38,11 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
     dt_us = (time.perf_counter() - t0) * 1e6
 
     stamp = _stamp(report)
-    payload = {"meta": {"files": report["files"],
+    # run_manifest degrades gracefully on jax-free hosts (backend/device
+    # fields stay None) — the lint suite must run without the jax stack
+    from repro.obs import manifest as run_manifest
+    payload = {"meta": {**run_manifest(seed=seed),
+                        "files": report["files"],
                         "baseline": "src/repro/analysis/baseline.json",
                         "by_rule": report["by_rule"], **stamp},
                "new": report["new"],

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.engine import batch as B
 from repro.core.engine import state as S
+from repro.obs import manifest as run_manifest
 from repro.simx.engine import SCHEMES, first_touch_populate, pool_cfg_for
 from repro.simx.trace import WORKLOADS, make_rates_table, make_trace
 
@@ -98,8 +99,9 @@ def run(quick: bool, seed: int = 0) -> List[Dict]:
                 for w in workloads]
     gm = float(np.exp(np.mean(np.log(speedups))))
     payload = {
-        "meta": {"n_accesses": n_accesses, "promoted_pages": prom,
-                 "window": window, "reps": reps, "quick": quick, "seed": seed,
+        "meta": {**run_manifest(seed=seed),
+                 "n_accesses": n_accesses, "promoted_pages": prom,
+                 "window": window, "reps": reps, "quick": quick,
                  "unit": "accesses/sec (steady state, compile excluded)"},
         "serial_acc_per_sec": serial,
         "batched_acc_per_sec": batched,

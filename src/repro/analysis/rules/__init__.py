@@ -10,6 +10,7 @@ from repro.analysis.rules import (
     r3_pytree_order,
     r4_pallas_hygiene,
     r5_sync_contract,
+    r6_obs_piggyback,
 )
 
 ALL_RULES = [
@@ -18,6 +19,7 @@ ALL_RULES = [
     r3_pytree_order,
     r4_pallas_hygiene,
     r5_sync_contract,
+    r6_obs_piggyback,
 ]
 
 RULE_TITLES = {m.RULE: m.TITLE for m in ALL_RULES}

@@ -1,0 +1,132 @@
+"""R6 — telemetry piggyback contract (``repro.obs``, DESIGN.md §16).
+
+The obs subsystem's whole premise is "zero extra syncs": the Recorder
+only ever consumes host values that the hot paths' *already-budgeted*
+fetches produced. Two ways code can break that premise, both visible
+syntactically:
+
+  * **an obs emission inside a jit region** — ``self.obs.record_*`` /
+    ``rec.record_*`` in traced code runs at trace time only (silently
+    recording nothing on later invocations) or, worse, concretizes a
+    tracer into a host sync per call. Telemetry must be emitted from the
+    host side of the boundary, fed by the region's fused outputs.
+  * **a device value handed to an obs drain inside a declared sync
+    contract** — ``obs.record_*(self.pools.counters, ...)`` inside an
+    ``@sync_contract`` method makes the Recorder's ``np.asarray`` a
+    second, hidden fetch site the R5 budget never sees. Drain arguments
+    must be host names (bound from the contracted ``device_get`` /
+    ``self._fetch``) or plain host expressions over them.
+
+Together with R5 this registers the obs drains as the *only* sanctioned
+host-side consumers of fetched telemetry payloads inside annotated
+methods: the fetch site count stays at the declared budget (R5) and
+everything the drains touch is provably post-fetch (R6).
+
+Deliberately conservative: dict-style string subscripts
+(``self.counters["steps"]``) are host bookkeeping, not device vectors —
+device counter arrays are indexed by named integer constants (R3) — so
+they never taint. A miss here is caught at runtime by
+``verify_sync_counters`` with the Recorder attached (tests/test_obs.py).
+"""
+import ast
+from typing import List, Optional
+
+from repro.analysis import core
+from repro.analysis.rules import r5_sync_contract as r5
+
+RULE = "R6"
+TITLE = "obs telemetry piggyback violation"
+
+_ATTACH = {"attach_fabric", "attach_serve"}
+_DEVICE_PRODUCER_ROOTS = {"jnp", "jax", "lax", "pl", "pltpu"}
+
+
+def _obs_emission(call: ast.Call) -> Optional[str]:
+    """``<recv>.record_*`` / ``<recv>.attach_*`` where the receiver chain
+    names an ``obs`` component, or any ``record_*`` method call — the
+    syntactic shape of a Recorder drain. Returns the method name."""
+    if not isinstance(call.func, ast.Attribute):
+        return None
+    attr = call.func.attr
+    d = core.dotted(call.func) or ""
+    on_obs = "obs" in d.split(".")
+    if attr.startswith("record_") or (on_obs and attr in _ATTACH):
+        return attr
+    return None
+
+
+def _device_expr(node, device_names) -> Optional[str]:
+    """Why ``node`` is (or contains) a device value, or None if it is
+    host-safe. String-constant subscripts are dict access → host."""
+    if isinstance(node, ast.Name):
+        if node.id in device_names:
+            return f"device value `{node.id}`"
+        return None
+    if isinstance(node, ast.Subscript):
+        sl = node.slice
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+            return None
+        return _device_expr(node.value, device_names)
+    if isinstance(node, ast.Attribute):
+        if node.attr in r5._DEVICE_ATTRS:
+            return f"device-state chain `{core.dotted(node) or node.attr}`"
+        return _device_expr(node.value, device_names)
+    if isinstance(node, ast.Call):
+        d = core.dotted(node.func) or ""
+        root = d.split(".")[0]
+        if d in core.DEVICE_GET_NAMES:
+            return None     # an explicit fetch argument is R5's finding
+        if root in _DEVICE_PRODUCER_ROOTS:
+            return f"`{d}(...)` result"
+        for a in node.args:
+            why = _device_expr(a, device_names)
+            if why:
+                return why
+        return None
+    if isinstance(node, (ast.BinOp, ast.UnaryOp, ast.Tuple, ast.List,
+                         ast.IfExp)):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                why = _device_expr(child, device_names)
+                if why:
+                    return why
+    return None
+
+
+def check(module: core.ModuleInfo) -> List[core.Finding]:
+    out: List[core.Finding] = []
+
+    # 1. no obs emission from inside a jit/traced region
+    for region in module.regions:
+        for call in core.iter_calls(region.node):
+            attr = _obs_emission(call)
+            if attr is None:
+                continue
+            out.append(module.finding(
+                RULE, call,
+                f"obs emission `{attr}` inside a jit region "
+                f"({region.reason}) — telemetry must ride the piggyback "
+                f"payload out of the region and drain host-side, never "
+                f"emit from traced code"))
+
+    # 2. drains inside declared sync contracts consume host values only
+    for node, qn in module.functions:
+        if r5.contract_of(node) is None:
+            continue
+        _host, device = r5._name_flow(node)
+        for call in core.iter_calls(node):
+            attr = _obs_emission(call)
+            if attr is None:
+                continue
+            args = list(call.args) + [kw.value for kw in call.keywords]
+            for a in args:
+                why = _device_expr(a, device)
+                if why:
+                    out.append(module.finding(
+                        RULE, a,
+                        f"obs drain `{attr}` in `{qn}` is handed {why} — "
+                        f"inside a @sync_contract the drain may only "
+                        f"consume host values from the contracted fetch "
+                        f"(a device argument is a hidden second sync "
+                        f"site)"))
+    return out

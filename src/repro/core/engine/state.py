@@ -206,6 +206,17 @@ def counters_delta(before: jnp.ndarray, after: jnp.ndarray) -> jnp.ndarray:
     return after - before
 
 
+def counters_delta_dict(delta) -> dict:
+    """Name-keyed view of a counter delta: ``[..., NUM_COUNTERS]`` (leading
+    axes — e.g. the expander axis — summed) → ``{counter_name: int}``. The
+    layout-safe way host-side consumers (the repro.obs telemetry drains,
+    summary tables) read fetched deltas: keys come from ``COUNTER_NAMES``,
+    never integer positions, so the R3 drift rule holds by construction.
+    Accepts numpy or (host) jnp arrays."""
+    vals = delta.reshape(-1, NUM_COUNTERS).sum(axis=0)
+    return {k: int(v) for k, v in zip(COUNTER_NAMES, vals)}
+
+
 def total_traffic(pool: Pool) -> jnp.ndarray:
     """Total internal 64B accesses (excludes host_reads/host_writes and
     event counters)."""

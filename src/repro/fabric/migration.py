@@ -92,6 +92,14 @@ class MigrationPlan:
     def __len__(self) -> int:
         return len(self.pages)
 
+    def pairs(self) -> List[Tuple[int, int]]:
+        """Sorted unique (src, dst) expander routes this plan uses — the
+        telemetry-facing shape of a plan (``obs.Recorder.record_plan``
+        tags each plan event with it, so a trace can show WHERE pages
+        were routed without storing every per-page move)."""
+        return sorted({(int(s), int(d))
+                       for s, d in zip(self.srcs, self.dsts)})
+
 
 def _plan(moves: List[Tuple[np.ndarray, int, int]],
           urgent: bool = False) -> Optional[MigrationPlan]:

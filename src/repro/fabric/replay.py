@@ -152,6 +152,13 @@ class Fabric:
     same boundary. ``sync_migration=True`` forces the synchronous
     reference driver (PR 3 semantics, bit-identical to depth 1).
 
+    ``obs`` is an optional ``repro.obs.Recorder``: when attached, the
+    per-segment/per-epoch samples it accumulates are drained from the SAME
+    single fetches the sync contract already budgets (DESIGN.md §16) —
+    recording changes neither the sync counts nor one bit of pool state
+    (with migration off, only the already-fused in-jit ``segment_stats``
+    output is additionally computed, read-only over the pool).
+
     ``devices`` is the expander fleet's timing model: ``None`` (default
     ``DeviceConfig`` everywhere), one ``DeviceConfig`` (homogeneous), or
     a sequence — shorter sequences cycle, so ``[gen5, gen4]`` on N=4
@@ -171,7 +178,7 @@ class Fabric:
                  devices=None, track_segments: bool = False,
                  migration: Union[str, MG.MigrationPolicy, None] = None,
                  pipeline_depth: int = 2, sync_migration: bool = False,
-                 on_epoch: Optional[Callable] = None):
+                 on_epoch: Optional[Callable] = None, obs=None):
         if placement.n_pages != cfg.n_pages:
             raise ValueError("placement/page-space mismatch")
         if pipeline_depth not in (1, 2):
@@ -199,6 +206,7 @@ class Fabric:
         self.pipeline_depth = pipeline_depth
         self.sync_migration = sync_migration
         self.on_epoch = on_epoch
+        self.obs = obs
         self.devices = TM.resolve_fleet(devices, self.n_expanders)
         self.lanes = TM.stack_devices(self.devices)
         self.pools = S.make_pool_stack(cfg, self.n_expanders, seed=seed,
@@ -231,6 +239,8 @@ class Fabric:
         # recur round after round with the trace never advancing
         self._blocked = np.zeros((cfg.n_pages,), bool)
         self._modeled_times = None
+        if obs is not None:
+            obs.attach_fabric(self)
 
     # -- pipeline stages -----------------------------------------------------
 
@@ -249,7 +259,8 @@ class Fabric:
             self.pools, self.cfg, self.policy,
             jnp.asarray(o[:, sl]), jnp.asarray(w[:, sl]),
             jnp.asarray(b[:, sl]), jnp.asarray(v[:, sl]),
-            self.lanes, pend, self.migration_enabled)
+            self.lanes, pend,
+            self.migration_enabled or self.obs is not None)
         self._modeled_times = times
         self.segments_replayed += 1
         return times, stats, self.pools.counters
@@ -269,9 +280,16 @@ class Fabric:
         delta = ctrs - self._last_counters
         self._last_counters = ctrs
         self.segment_deltas.append(delta)
+        if stats is not None:
+            self._last_free = np.asarray(stats.free_units, np.int64)
+        if self.obs is not None:
+            # telemetry drain: the Recorder consumes the host values this
+            # single contracted fetch already produced — zero extra syncs
+            self.obs.record_segment(self.segments_replayed - 1, delta,
+                                    np.asarray(t, np.float64),
+                                    self._last_free)
         if stats is None:
             return None
-        self._last_free = np.asarray(stats.free_units, np.int64)
         return MG.SegmentView(free_units=self._last_free,
                               free_singles=np.asarray(stats.free_singles,
                                                       np.int64),
@@ -289,6 +307,14 @@ class Fabric:
         livelock guard barred (their last planned epoch moved nothing)."""
         if view is None:
             return None
+        plan = self._plan_filtered(view)
+        if plan is not None and self.obs is not None:
+            self.obs.record_plan(self.segments_replayed - 1, plan,
+                                 self.migration_policy.name)
+        return plan
+
+    def _plan_filtered(self, view: MG.SegmentView
+                       ) -> Optional[MG.MigrationPlan]:
         plan = self.migration_policy.plan(view)
         if plan is None or not self._blocked.any():
             return plan
@@ -321,7 +347,8 @@ class Fabric:
     def _commit_epoch(self, plan: MG.MigrationPlan, srcs, dsts, moved,
                       overlapping_seg: int,
                       view: Optional[MG.SegmentView] = None,
-                      overlapped: bool = False) -> np.ndarray:
+                      overlapped: bool = False,
+                      kind: str = "sync") -> np.ndarray:
         """Fetch the epoch's outcome (the ONE sync per epoch), commit the
         override-table updates as ONE batched scatter, and record the
         migration counter delta against the segment it overlapped.
@@ -354,8 +381,8 @@ class Fabric:
         self.epoch_syncs += 1
         self.spill_syncs = self.epoch_syncs
         ctrs = np.asarray(ctrs, np.int64)
-        self.migration_deltas.append(
-            (overlapping_seg, ctrs - self._last_counters, overlapped))
+        delta = ctrs - self._last_counters
+        self.migration_deltas.append((overlapping_seg, delta, overlapped))
         self._last_counters = ctrs
         self._last_free = free_units
         moved = np.asarray(moved)
@@ -375,6 +402,12 @@ class Fabric:
             # plan's pages from re-planning until some epoch succeeds, or
             # an un-appliable plan recurs forever (livelock guard)
             self._blocked[plan.pages] = True
+        if self.obs is not None:
+            # telemetry drain: same single per-epoch fetch, zero extra syncs
+            self.obs.record_epoch(overlapping_seg, delta, kind=kind,
+                                  overlapped=overlapped, planned=len(plan),
+                                  moved=len(pages_moved), urgent=plan.urgent,
+                                  free_units=free_units)
         if view is not None:
             view.free_units = self._last_free
             view.free_singles = np.asarray(stats.free_singles, np.int64)
@@ -413,7 +446,8 @@ class Fabric:
             # synchronous path would have applied it at the same boundary)
             applied = self._dispatch_apply(self._pending_plan)
             self._pending_plan = None
-            self._commit_epoch(*applied, self.segments_replayed)
+            self._commit_epoch(*applied, self.segments_replayed,
+                               kind="drain")
         return self
 
     def _segments(self, n_win: int) -> int:
@@ -464,7 +498,7 @@ class Fabric:
             if applied is not None:
                 moved_pages = self._commit_epoch(
                     *applied, self.segments_replayed - 1, view,
-                    overlapped=True)
+                    overlapped=True, kind="overlapped")
                 # accesses this segment deferred by the pending mask —
                 # replayed after the commit, routed to the final home
                 defer = []
@@ -484,8 +518,10 @@ class Fabric:
                     # watermark) must not wait a segment — relief that
                     # lands after the freelists run dry is corruption,
                     # not overlap
-                    m1 = self._commit_epoch(*self._dispatch_apply(plan),
-                                            self.segments_replayed - 1)
+                    m1 = self._commit_epoch(
+                        *self._dispatch_apply(plan),
+                        self.segments_replayed - 1,
+                        kind="urgent" if plan.urgent else "sync")
                     moved_pages = np.concatenate([moved_pages, m1])
                 elif plan is not None:
                     self._pending_plan = plan

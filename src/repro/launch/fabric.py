@@ -68,6 +68,12 @@ def main() -> None:
                          "the synchronous driver and assert bit-identical "
                          "final state (the CI overlapped-migration smoke)")
     ap.add_argument("--check-parity", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="OUT.trace.json",
+                    help="attach a repro.obs.Recorder (piggybacked on the "
+                         "existing per-segment/per-epoch fetches — zero "
+                         "extra syncs, asserted below), write the Perfetto "
+                         "trace_event export there plus a metrics.json "
+                         "sibling, and print the per-segment summary table")
     ap.add_argument("--device-profile", default="default",
                     help="comma-separated simx.time.DEVICE_PROFILES names "
                          f"({', '.join(sorted(TM.DEVICE_PROFILES))}) or "
@@ -113,8 +119,12 @@ def main() -> None:
                       rates_table=jnp.asarray(rates), window=args.window,
                       migration=migration, devices=devices, **kw)
 
+    rec = None
+    if args.trace:
+        from repro.obs import Recorder
+        rec = Recorder()
     fab = make_fabric(placement, sync_migration=args.sync_migration,
-                      pipeline_depth=args.pipeline_depth)
+                      pipeline_depth=args.pipeline_depth, obs=rec)
     t0 = time.time()
     fab.replay(ospn, wr, blk)
     dt = time.time() - t0
@@ -152,6 +162,23 @@ def main() -> None:
         print(f"  pipeline pricing ({pt['mode']}): overlapped={over * 1e6:.1f}us "
               f"sync={sync * 1e6:.1f}us "
               f"(migration overlap hides {(sync - over) * 1e6:.2f}us)")
+
+    if rec is not None:
+        from repro.obs import export as OBX
+        # the contract held with recording ON (sync asserts above); the
+        # exported tracks must reconcile with the pipeline pricing exactly
+        totals = OBX.fabric_track_totals(rec)
+        if pt is not None:
+            assert np.allclose(totals["overlapped_s"], pt["overlapped_s"],
+                               rtol=1e-9), "trace drifted from pipeline_times"
+        OBX.write_trace(rec, args.trace)
+        mpath = (args.trace[: -len(".trace.json")] if
+                 args.trace.endswith(".trace.json") else args.trace) \
+            + ".metrics.json"
+        OBX.write_metrics(rec, mpath, seed=args.seed)
+        print(f"  trace: {args.trace} (+ {mpath}); per-expander track "
+              f"totals reconcile with pipeline_times (asserted)")
+        print(OBX.fabric_summary_table(rec))
 
     if args.verify_depth1:
         f1 = make_fabric(new_placement(), pipeline_depth=1)

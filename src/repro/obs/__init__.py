@@ -1,0 +1,30 @@
+"""Zero-extra-sync telemetry (DESIGN.md §16).
+
+The observability layer's collection path adds NO host syncs: every
+sample rides inside a payload the hot paths already fetch under their
+declared ``@sync_contract`` budgets — the fabric's fused per-segment
+stats fetch (``Fabric._fetch_view``), the per-epoch moved-pages fetch
+(``Fabric._commit_epoch``), and the serving engine's single per-step
+``(tok, done, ref, pos)`` fetch (``serve.Engine.step``). The
+:class:`Recorder` accumulates those piggybacked samples host-side into a
+metrics registry (counters / gauges / histograms keyed by
+``state.COUNTER_NAMES`` — never integer literals, R3 stays clean) and a
+structured event log; exporters turn them into a Chrome/Perfetto
+``trace_event`` timeline, a ``metrics.json`` snapshot, and the run
+manifest stamped into every BENCH_*.json.
+
+Instrumentation is opt-in: ``obs=None`` (the default everywhere) is the
+recording-off path, bit-identical in pool/counter state to recording-on
+(tests/test_obs.py pins this), and the analyzer's R6 rule enforces that
+telemetry is emitted ONLY through these piggyback drains.
+"""
+from repro.obs.manifest import manifest
+from repro.obs.recorder import Recorder
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                merge_histograms)
+from repro.obs import export
+
+__all__ = [
+    "Recorder", "manifest", "export",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "merge_histograms",
+]

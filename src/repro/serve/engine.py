@@ -28,9 +28,11 @@ bit, active mask, remaining budget) lives in device arrays and is advanced
 *inside* the jitted engine step — argmax, position advance, done detection
 and reference-bit updates all happen on device. The host performs exactly
 ONE device sync per decode step (``counters["step_syncs"]``): a single
-``device_get`` of the (tokens, done, ref) triple that drives per-request
-Python bookkeeping. Admission-path syncs (one per prefill bucket, one per
-demotion fetch) are counted separately in ``counters["admit_syncs"]``.
+``device_get`` of the (tokens, done, ref, pos) quad that drives per-request
+Python bookkeeping (and, when a ``repro.obs.Recorder`` is attached, the
+per-step telemetry sample — piggybacked, zero extra syncs). Admission-path
+syncs (one per prefill bucket, one per demotion fetch) are counted
+separately in ``counters["admit_syncs"]``.
 
 **Prefill batching.** Fresh requests admitted in the same engine step are
 prefilled together, grouped into power-of-two length buckets (right-padded;
@@ -265,7 +267,7 @@ def _moved_bytes(parked: Dict[str, Any], n_tokens: int, max_len: int) -> int:
 
 class _EngineBase:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
-                 max_len: int = 2048, seed: int = 0):
+                 max_len: int = 2048, seed: int = 0, obs=None):
         self.cfg, self.scfg = cfg, scfg
         self.params = params
         self.max_len = max_len
@@ -301,6 +303,12 @@ class _EngineBase:
         (self._step_fn, self._prefill_fn, self._demote_fn,
          self._decode_fn) = _compiled_fns(
             cfg, dataclasses.replace(scfg, n_expanders=1), max_len)
+        # telemetry (repro.obs.Recorder, DESIGN.md §16): samples ride the
+        # contracted fetches the engine already performs — attaching a
+        # recorder changes neither sync counts nor any device state
+        self.obs = obs
+        if obs is not None:
+            obs.attach_serve(self)
 
     # -- client API ---------------------------------------------------------
 
@@ -401,7 +409,8 @@ class _EngineBase:
         self.counters["resume_bytes"] += moved
         exp = int(self.lane_expander[lane])
         self.expander_stats["resume_bytes"][exp] += moved
-        if req.expander >= 0 and req.expander != exp:
+        cross = req.expander >= 0 and req.expander != exp
+        if cross:
             # the parked payload crosses the fabric to the new lane's
             # expander; the shadow follows it (its prefix stays valid —
             # append-only KV does not care which expander holds it)
@@ -410,6 +419,8 @@ class _EngineBase:
             self.expander_stats["parked"][exp] += 1
             req.expander = exp
         self.counters["promotions"] += 1
+        if self.obs is not None:
+            self.obs.record_resume(lane, req.rid, moved, cross, exp)
         req.lane = lane
         req.state = RUNNING
         self.lane_req[lane] = req.rid
@@ -419,8 +430,8 @@ class Engine(_EngineBase):
     """Device-resident batched scheduler (module docstring has the design)."""
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
-                 max_len: int = 2048, seed: int = 0):
-        super().__init__(cfg, scfg, params, max_len, seed)
+                 max_len: int = 2048, seed: int = 0, obs=None):
+        super().__init__(cfg, scfg, params, max_len, seed, obs=obs)
         # device-resident lane bookkeeping, advanced inside the jitted step
         self.state = {
             "tok": jnp.zeros((self.lanes,), jnp.int32),
@@ -530,6 +541,8 @@ class Engine(_EngineBase):
             self.cache = _lanes_install(self.cache, lanes_arr, real)
             toks_h = self._fetch(toks[:k], "admit_syncs")
             self.counters["prefill_batches"] += 1
+            if self.obs is not None:
+                self.obs.record_admission(k, L)
             for i, (rid, lane) in enumerate(grp):
                 req = self.requests[rid]
                 req.generated.append(int(toks_h[i]))
@@ -557,10 +570,17 @@ class Engine(_EngineBase):
         resume and decode; the organic payoff is the suffix-only charge."""
         rid = self.lane_req[lane]
         req = self.requests[rid]
-        if req.parked is not None and req.shadow_pos >= req.pos:
+        shadow_hit = req.parked is not None and req.shadow_pos >= req.pos
+        if shadow_hit:
             self.counters["shadow_repreempts"] += 1
+            moved = 0
         else:
+            before = self.counters["preempt_bytes"]
             self._park_lane(req, lane)
+            moved = self.counters["preempt_bytes"] - before
+        if self.obs is not None:
+            self.obs.record_preempt(lane, rid, moved, shadow_hit,
+                                    int(self.lane_expander[lane]))
         self.counters["demotions"] += 1
         req.state = PREEMPTED
         req.lane = -1
@@ -595,9 +615,16 @@ class Engine(_EngineBase):
         self.cache, self.state, done = self._step_fn(
             self.params, self.cache, self.state, **kwargs)
         self.counters["steps"] += 1
-        tok_h, done_h, ref_h = self._fetch(
-            (self.state["tok"], done, self.state["ref"]), "step_syncs")
+        # ONE fused fetch: the lane positions ride along unconditionally —
+        # a conditional fetch would be a second lexical sync site (R5) —
+        # and feed the telemetry drain below at zero extra syncs
+        tok_h, done_h, ref_h, pos_h = self._fetch(
+            (self.state["tok"], done, self.state["ref"], self.state["pos"]),
+            "step_syncs")
         self._ref = np.array(ref_h, bool, copy=True)
+        if self.obs is not None:
+            self.obs.record_step(self.counters["steps"], tok_h, done_h,
+                                 pos_h, [lane for lane, _ in active])
         for lane, rid in active:
             req = self.requests[rid]
             req.pos += 1

@@ -72,13 +72,15 @@ def run_workload(scheme_name: str, spec: WorkloadSpec, *,
                  n_accesses: int = 20000, promoted_pages: int = 128,
                  seed: int = 0, first_touch: bool = True,
                  device: Optional[DEV.DeviceConfig] = None,
-                 window: int = DEFAULT_WINDOW) -> Dict[str, float]:
+                 window: int = DEFAULT_WINDOW, obs=None) -> Dict[str, float]:
     """Run one (scheme x workload) cell; returns traffic + time metrics.
 
     Pool dimensions are FIXED (4x promoted region) across workloads so the
     jitted replay compiles once per scheme; a workload's footprint is
     realized by restricting which pages its trace touches. ``window=1``
-    forces the serial one-access-per-step scan (benchmark baseline)."""
+    forces the serial one-access-per-step scan (benchmark baseline).
+    ``obs`` (a ``repro.obs.Recorder``) records the finished cell's metrics
+    — host data the run already produced, zero extra syncs."""
     policy = SCHEMES[scheme_name]
     n_pages = 4 * promoted_pages
     n_used = min(max(int(promoted_pages * spec.footprint_pages), 32), n_pages)
@@ -90,18 +92,23 @@ def run_workload(scheme_name: str, spec: WorkloadSpec, *,
         dev = replace(dev, block_scale=4.0)
 
     if policy.line_level:
-        return _run_compresso(spec, rates[:n_used], ospn, is_write, dev)
-
-    cfg = pool_cfg_for(policy, n_pages=n_pages, n_pchunks=promoted_pages,
-                       n_cchunks=2 * n_pages * 8)
-    pool = S.make_pool(cfg, seed=seed, rates_table=jnp.asarray(rates))
-    if first_touch:
-        pool = first_touch_populate(pool, cfg, policy, n_used=n_used,
-                                    seed=seed, window=window)
-    pool = B.replay_trace(pool, cfg, policy, ospn, is_write, block,
-                          window=window)
-    c = S.counters_dict(pool)
-    return _finalize(c, dev, ratio=float(S.compression_ratio(pool, cfg)))
+        out = _run_compresso(spec, rates[:n_used], ospn, is_write, dev)
+    else:
+        cfg = pool_cfg_for(policy, n_pages=n_pages,
+                           n_pchunks=promoted_pages,
+                           n_cchunks=2 * n_pages * 8)
+        pool = S.make_pool(cfg, seed=seed, rates_table=jnp.asarray(rates))
+        if first_touch:
+            pool = first_touch_populate(pool, cfg, policy, n_used=n_used,
+                                        seed=seed, window=window)
+        pool = B.replay_trace(pool, cfg, policy, ospn, is_write, block,
+                              window=window)
+        c = S.counters_dict(pool)
+        out = _finalize(c, dev,
+                        ratio=float(S.compression_ratio(pool, cfg)))
+    if obs is not None:
+        obs.record_cell(scheme_name, spec.name, out)
+    return out
 
 
 def _finalize(c: Dict[str, int], dev: DEV.DeviceConfig, ratio: float

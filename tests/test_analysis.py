@@ -355,6 +355,100 @@ def test_r5_suppressed_site_excluded_from_budget():
 
 
 # ---------------------------------------------------------------------------
+# R6 — obs telemetry piggyback
+# ---------------------------------------------------------------------------
+
+def test_r6_emission_inside_jit_region():
+    fs = _lint_src("""
+        import jax
+
+        @jax.jit
+        def kernel(pool, obs):
+            obs.record_segment(0, pool.counters, None, None)
+            return pool
+    """)
+    assert _rules(fs).count("R6") == 1, [f.render() for f in fs]
+    assert "inside a jit region" in fs[0].message
+
+
+def test_r6_emission_in_traced_combinator_body():
+    fs = _lint_src("""
+        import jax
+
+        def scan_all(xs, obs):
+            def body(carry, x):
+                obs.record_step(carry, x, x, x, [])
+                return carry, x
+            return jax.lax.scan(body, 0, xs)
+    """)
+    assert "R6" in _rules(fs), [f.render() for f in fs]
+
+
+def test_r6_device_value_handed_to_drain_in_contract():
+    fs = _lint_src("""
+        import jax
+        import numpy as np
+        from repro.common.contracts import sync_contract
+
+        class Eng:
+            @sync_contract(syncs_per="segment", fetches=1)
+            def fetch_view(self, times):
+                ctrs = jax.device_get(self.pools.counters)
+                # the drain below is handed LIVE device state — the
+                # Recorder's np.asarray would be a hidden second sync
+                self.obs.record_segment(0, self.pools.counters,
+                                        np.asarray(ctrs), None)
+                return ctrs
+    """)
+    r6 = [f for f in fs if f.rule == "R6"]
+    assert len(r6) == 1, [f.render() for f in fs]
+    assert "hidden second sync" in r6[0].message
+
+
+def test_r6_negative_host_drain_is_sanctioned():
+    """The repo's actual drain shape: everything the Recorder is handed
+    was bound from the single contracted fetch (or is host bookkeeping,
+    like a string-keyed dict counter) — no findings."""
+    fs = _lint_src("""
+        import jax
+        import numpy as np
+        from repro.common.contracts import sync_contract
+
+        class Eng:
+            @sync_contract(syncs_per="step", fetches=1)
+            def step(self, done, active):
+                tok_h, done_h, ref_h, pos_h = self._fetch(
+                    (self.state, done, self.ref, self.pos))
+                if self.obs is not None:
+                    self.obs.record_step(self.counters["steps"], tok_h,
+                                         done_h, pos_h,
+                                         [lane for lane, _ in active])
+                return tok_h
+    """)
+    assert _rules(fs) == [], [f.render() for f in fs]
+
+
+def test_r6_device_producer_call_as_drain_arg():
+    fs = _lint_src("""
+        import jax
+        import jax.numpy as jnp
+        from repro.common.contracts import sync_contract
+
+        class Eng:
+            @sync_contract(syncs_per="epoch", fetches=1)
+            def commit(self):
+                moved = jax.device_get(self.moved)
+                self.obs.record_epoch(0, jnp.sum(self.pools.counters),
+                                      kind="sync", overlapped=False,
+                                      planned=0, moved=0, urgent=False,
+                                      free_units=moved)
+                return moved
+    """)
+    r6 = [f for f in fs if f.rule == "R6"]
+    assert len(r6) >= 1, [f.render() for f in fs]
+
+
+# ---------------------------------------------------------------------------
 # Baseline ratchet
 # ---------------------------------------------------------------------------
 
