@@ -34,7 +34,10 @@ TITLE = "host-sync contract (@sync_contract) violation"
 REQUIRED_CONTRACTS: Dict[str, Dict[str, str]] = {
     "serve/engine.py": {"Engine.step": "step"},
     "fabric/replay.py": {"Fabric._fetch_view": "segment",
-                         "Fabric._commit_epoch": "epoch"},
+                         "Fabric._commit_epoch": "epoch",
+                         "Fabric._commit_boundary": "boundary",
+                         "Fabric._drain_deferred": "drain",
+                         "Fabric.delivered_time": "call"},
 }
 
 _DEVICE_GET = {"jax.device_get", "device_get"}

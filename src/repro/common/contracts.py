@@ -34,8 +34,12 @@ _ATTR = "__sync_contract__"
 
 # The event kinds the repo's runtime counters are keyed on. Free-form
 # strings are allowed (the analyzer only needs identity), but sticking to
-# these keeps the bench cross-checks uniform.
-KNOWN_EVENTS = ("step", "segment", "epoch", "admission")
+# these keeps the bench cross-checks uniform. "boundary" is the sharded
+# fabric driver's fused per-segment-boundary fetch, "drain" its one
+# deferred migration-off fetch per replay() call, "call" a per-invocation
+# metric fetch (Fabric.delivered_time).
+KNOWN_EVENTS = ("step", "segment", "epoch", "admission", "boundary",
+                "drain", "call")
 
 
 @dataclass(frozen=True)

@@ -3,13 +3,57 @@
 Every parameter / activation annotates its dims with *logical* axis names;
 ``logical_to_spec`` resolves them to mesh axes through a rule table. Hillclimb
 iterations in EXPERIMENTS.md §Perf swap rule tables, not model code.
+
+The fabric's ``expander`` mesh axis (DESIGN.md §17) also lives here:
+``force_host_device_count(n)`` makes N CPU devices exist anywhere (CI
+included) via the ``xla_force_host_platform_device_count`` flag, and
+``expander_mesh(d)`` builds the 1-D mesh the sharded fabric drivers run
+on. The force MUST happen before jax initializes its backend — importing
+any ``repro.*`` engine module initializes it (module-level jnp constants),
+so launchers set it as their literal first statement (launch/dryrun.py,
+launch/fabric.py ``--devices``).
 """
 from __future__ import annotations
 
+import os
 from typing import Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# the fabric's device axis: one shard of the stacked pool pytree per device
+EXPANDER_AXIS = "expander"
+
+
+def force_host_device_count(n: int) -> None:
+    """Make ``n`` XLA host (CPU) devices exist, the SNIPPETS idiom:
+    merge ``--xla_force_host_platform_device_count=n`` into XLA_FLAGS.
+    Must run before the jax backend initializes (first trace/device query);
+    a later call is silently ineffective, which ``host_device_count`` lets
+    callers detect."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    kept = [f for f in flags.split() if not f.startswith(
+        "--xla_force_host_platform_device_count")]
+    kept.append(f"--xla_force_host_platform_device_count={n}")
+    os.environ["XLA_FLAGS"] = " ".join(kept)
+
+
+def host_device_count() -> int:
+    """Devices actually visible to jax (after any force took effect)."""
+    return jax.device_count()
+
+
+def expander_mesh(n_devices: int) -> Mesh:
+    """1-D mesh over the first ``n_devices`` devices, axis ``expander``.
+    The sharded fabric requires n_expanders % n_devices == 0 so every
+    device owns an equal block of the stacked pool pytree."""
+    import numpy as _np
+    devs = jax.devices()
+    if n_devices > len(devs):
+        raise ValueError(
+            f"expander_mesh({n_devices}) but only {len(devs)} devices "
+            "visible; call force_host_device_count before jax initializes")
+    return Mesh(_np.asarray(devs[:n_devices]), (EXPANDER_AXIS,))
 
 # Default rule table: FSDP over "data", tensor parallel over "model",
 # batch over ("pod","data"). ``None`` -> replicated.
@@ -31,6 +75,7 @@ DEFAULT_RULES: Tuple[Tuple[str, Optional[object]], ...] = (
     ("kv_hot", None),   # hot-ring W axis (sharded over model when kv_heads cannot)
     ("latent", None),
     ("state", None),
+    ("expander", ("expander",)),     # fabric pool stack: one shard per device
 )
 
 

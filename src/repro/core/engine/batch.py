@@ -126,7 +126,8 @@ def _mcache_window(pool: Pool, cfg: PoolConfig, policy: Policy, ospns) -> Pool:
     return pool._replace(cache=cache, activity=activity, counters=counters)
 
 
-def _window_step(pool: Pool, cfg: PoolConfig, policy: Policy, xs):
+def _window_step(pool: Pool, cfg: PoolConfig, policy: Policy, xs,
+                 unroll_slow: bool = False):
     ospns, writes, blocks = xs
     window = ospns.shape[0]
     zero_block = jnp.zeros((cfg.vals_per_block,), jnp.bfloat16)
@@ -192,6 +193,15 @@ def _window_step(pool: Pool, cfg: PoolConfig, policy: Policy, xs):
     # window with more slow accesses than SLOW_FORI, e.g. first-touch
     # population) drains through a while loop, whose heavy bodies XLA runs
     # ~3x slower — hence the split.
+    #
+    # ``unroll_slow`` replaces BOTH lax loops with a statically unrolled
+    # python loop over the full window: XLA:CPU deterministically
+    # miscompiles this drain when the vmapped body sits inside a
+    # ``shard_map`` manual region on any device other than 0 (a window's
+    # slow write replays as a read; forced host devices, jax 0.4.37 —
+    # isolated by tests/test_fabric_sharded.py's bit-identity suite),
+    # while the unrolled form is bit-exact there. Single-device paths
+    # keep the loops: same op sequence, smaller HLO.
     n_slow = jnp.sum(~fast)
     slow_order = jnp.argsort(jnp.where(fast, window + jnp.arange(window),
                                        jnp.arange(window)))
@@ -212,6 +222,13 @@ def _window_step(pool: Pool, cfg: PoolConfig, policy: Policy, xs):
             return ops.read_block_op(r, cfg, policy, ospns[k], blocks[k])[0]
 
         return jax.lax.cond(writes[k], do_write, do_read, p)
+
+    if unroll_slow:
+        for i in range(window):
+            pool = jax.lax.cond(i < n_slow,
+                                functools.partial(process, slow_order[i]),
+                                lambda q: q, pool)
+        return pool, None
 
     k_fori = min(SLOW_FORI, window)
     pool = jax.lax.fori_loop(
@@ -290,7 +307,7 @@ def _replay_serial(pool: Pool, cfg: PoolConfig, policy: Policy, ospns,
 
 def _replay_windows_masked(pool: Pool, cfg: PoolConfig, policy: Policy,
                            ospns, writes, blocks, valid,
-                           pending=None) -> Pool:
+                           pending=None, unroll_slow: bool = False) -> Pool:
     """Window scan over a *padded* trace: the multi-expander fabric's entry
     point (fabric/replay.py vmaps it over a stacked pool state).
 
@@ -310,6 +327,10 @@ def _replay_windows_masked(pool: Pool, cfg: PoolConfig, policy: Policy,
     three-way branch lowers to selects, so every expander pays the heavier
     body's cost; fabric throughput numbers carry that constant honestly
     (benchmarks/fabric_bench.py).
+
+    ``unroll_slow`` is forwarded to ``_window_step``: the sharded fabric
+    passes True because XLA:CPU miscompiles the fori/while slow-access
+    drain inside ``shard_map`` manual regions (see ``_window_step``).
 
     ``pending`` is the fabric scheduler's carried pending-migration mask
     (bool[n_pages], shared across expanders): accesses to pages whose
@@ -338,7 +359,8 @@ def _replay_windows_masked(pool: Pool, cfg: PoolConfig, policy: Policy,
             return q
 
         def all_valid(q: Pool) -> Pool:
-            return _window_step(q, cfg, policy, (o, w, b))[0]
+            return _window_step(q, cfg, policy, (o, w, b),
+                                unroll_slow=unroll_slow)[0]
 
         branch = jnp.where(jnp.all(v), 2,
                            jnp.where(jnp.any(v), 1, 0)).astype(jnp.int32)

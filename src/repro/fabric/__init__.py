@@ -15,9 +15,15 @@ OSPA pages to expanders through a pluggable placement layer:
   * ``replay``    — the segment scheduler: trace partitioning + vmapped
     replay over the stacked state (reusing ``engine.batch``'s window
     bodies unchanged), double-buffered overlapped migration with a
-    carried pending-page mask, and the synchronous reference driver.
+    carried pending-page mask, and the synchronous reference driver;
+  * ``shard``     — the same fabric on a *real* device mesh (DESIGN.md
+    §17): ``shard_map``-ed replay over the ``expander`` axis, the
+    MigrationPolicy plan step as a pure jittable function, and epochs
+    applied as collective page motion (psum metadata broadcast +
+    ppermute payload ring) — bit-identical per expander to the vmap
+    drivers, one fused host sync per boundary.
 """
-from repro.fabric import migration, ops, placement, replay
+from repro.fabric import migration, ops, placement, replay, shard
 from repro.fabric.migration import (MigrationPlan, MigrationPolicy,
                                     NoMigration, SegmentView, SpillPressure,
                                     TrafficRebalance, make_migration_policy)
@@ -28,7 +34,7 @@ from repro.fabric.placement import (CapacityAware, LocalityAffinity,
 from repro.fabric.replay import Fabric, partition_trace
 
 __all__ = [
-    "migration", "ops", "placement", "replay",
+    "migration", "ops", "placement", "replay", "shard",
     "Placement", "StaticInterleave", "CapacityAware", "LocalityAffinity",
     "WeightedInterleave", "make_placement",
     "MigrationPolicy", "MigrationPlan", "SegmentView", "NoMigration",

@@ -73,6 +73,48 @@ def segment_stats(pool: Pool, cfg: PoolConfig) -> SegmentStats:
                         referenced=referenced)
 
 
+def page_eligible(entry) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(eligible, nchunks) from a metadata entry: valid, non-promoted,
+    chunk-backed — the per-move re-check every apply path shares."""
+    w0 = entry[0]
+    nchunks = md.get_num_chunks(w0).astype(jnp.int32)
+    eligible = (md.get_valid(w0) == 1) & (md.get_promoted(w0) == 0) & \
+        (nchunks > 0)
+    return eligible, nchunks
+
+
+def migrate_src(s: Pool, cfg: PoolConfig, policy: Policy, ospn, entry,
+                nchunks) -> Pool:
+    """Source half of one page move (the payload gather happens at the
+    caller — the collective apply routes it over the mesh between the
+    halves): charge the demotion-read + metadata traffic, free the
+    chunks, invalidate the entry."""
+    moved_units = (nchunks * (cfg.chunk_bytes // 64)).astype(CTR_DTYPE)
+    sc = policy.charge_migration(s.counters, C_DEMO_RD, moved_units)
+    sc = bump(sc, C_META_RD, ops.meta_width(cfg, ospn))
+    s = ops.free_chunks(s._replace(counters=sc), cfg, entry)
+    return s._replace(meta=s.meta.at[ospn].set(md.empty_entry()),
+                      counters=bump(s.counters, C_META_WR,
+                                    ops.meta_width(cfg, ospn)))
+
+
+def migrate_dst(d: Pool, cfg: PoolConfig, policy: Policy, ospn, entry,
+                nchunks, buf) -> Pool:
+    """Destination half: allocate, store the routed payload, write the
+    travelled metadata word with the pointers rewritten for the
+    destination's allocation."""
+    moved_units = (nchunks * (cfg.chunk_bytes // 64)).astype(CTR_DTYPE)
+    d, ptrs, is_group = ops.alloc_chunks(d, cfg, nchunks)
+    d = ops._scatter_page_buf(d, cfg, buf, ptrs, nchunks, is_group)
+    new_entry = entry
+    for i in range(7):
+        new_entry = md.set_ptr(new_entry, i, jnp.maximum(ptrs[i], 0))
+    dc = policy.charge_migration(d.counters, C_DEMO_WR, moved_units)
+    dc = bump(dc, C_META_WR, ops.meta_width(cfg, ospn))
+    dc = policy.on_compress_store(dc)
+    return d._replace(meta=d.meta.at[ospn].set(new_entry), counters=dc)
+
+
 def migrate_page(src: Pool, dst: Pool, cfg: PoolConfig, policy: Policy,
                  ospn) -> Tuple[Pool, Pool, jnp.ndarray]:
     """Move one page's compressed copy from ``src`` to ``dst``.
@@ -80,35 +122,20 @@ def migrate_page(src: Pool, dst: Pool, cfg: PoolConfig, policy: Policy,
     Eligible pages are valid, non-promoted, and chunk-backed; anything else
     is a no-op (returns moved=False). The metadata word travels unchanged
     (rates, sizes, num_chunks, wr_cntr); only the chunk pointers are
-    rewritten for the destination's allocation."""
+    rewritten for the destination's allocation. Composed from the same
+    ``migrate_src`` / ``migrate_dst`` halves the sharded collective apply
+    uses, so the two paths stay bit-identical per move."""
     entry = src.meta[ospn]
-    w0 = entry[0]
-    nchunks = md.get_num_chunks(w0).astype(jnp.int32)
-    eligible = (md.get_valid(w0) == 1) & (md.get_promoted(w0) == 0) & \
-        (nchunks > 0)
+    eligible, nchunks = page_eligible(entry)
 
     def do(carry):
         s, d = carry
         # source: read the compressed payload (nchunks * 512B), free the
         # chunks, invalidate the entry
         buf = ops._gather_page_buf(s, cfg, entry)
-        moved_units = (nchunks * (cfg.chunk_bytes // 64)).astype(CTR_DTYPE)
-        sc = policy.charge_migration(s.counters, C_DEMO_RD, moved_units)
-        sc = bump(sc, C_META_RD, ops.meta_width(cfg, ospn))
-        s = ops.free_chunks(s._replace(counters=sc), cfg, entry)
-        s = s._replace(meta=s.meta.at[ospn].set(md.empty_entry()),
-                       counters=bump(s.counters, C_META_WR,
-                                     ops.meta_width(cfg, ospn)))
+        s = migrate_src(s, cfg, policy, ospn, entry, nchunks)
         # destination: allocate, store, write the travelled metadata word
-        d, ptrs, is_group = ops.alloc_chunks(d, cfg, nchunks)
-        d = ops._scatter_page_buf(d, cfg, buf, ptrs, nchunks, is_group)
-        new_entry = entry
-        for i in range(7):
-            new_entry = md.set_ptr(new_entry, i, jnp.maximum(ptrs[i], 0))
-        dc = policy.charge_migration(d.counters, C_DEMO_WR, moved_units)
-        dc = bump(dc, C_META_WR, ops.meta_width(cfg, ospn))
-        dc = policy.on_compress_store(dc)
-        d = d._replace(meta=d.meta.at[ospn].set(new_entry), counters=dc)
+        d = migrate_dst(d, cfg, policy, ospn, entry, nchunks, buf)
         return s, d
 
     src, dst = jax.lax.cond(eligible, do, lambda c: c, (src, dst))

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import sharding as shd
 from repro.common.contracts import sync_contract
 from repro.common.types import PoolConfig
 from repro.common.utils import next_pow2
@@ -66,6 +67,7 @@ from repro.core.engine import state as S
 from repro.core.engine.policy import Policy
 from repro.fabric import migration as MG
 from repro.fabric import ops as fops
+from repro.fabric import shard as FS
 from repro.fabric.placement import Placement
 from repro.simx import time as TM
 
@@ -178,11 +180,16 @@ class Fabric:
                  devices=None, track_segments: bool = False,
                  migration: Union[str, MG.MigrationPolicy, None] = None,
                  pipeline_depth: int = 2, sync_migration: bool = False,
+                 shard_devices: Optional[int] = None,
                  on_epoch: Optional[Callable] = None, obs=None):
         if placement.n_pages != cfg.n_pages:
             raise ValueError("placement/page-space mismatch")
         if pipeline_depth not in (1, 2):
             raise ValueError("pipeline_depth must be 1 or 2")
+        if shard_devices is not None and \
+                placement.n_expanders % shard_devices:
+            raise ValueError(f"{placement.n_expanders} expanders not "
+                             f"divisible by shard_devices={shard_devices}")
         self.cfg = cfg
         self.policy = policy
         self.placement = placement
@@ -211,6 +218,20 @@ class Fabric:
         self.lanes = TM.stack_devices(self.devices)
         self.pools = S.make_pool_stack(cfg, self.n_expanders, seed=seed,
                                        rates_table=rates_table)
+        # sharded mode (DESIGN.md §17): the stacked pytree lives on a
+        # device mesh, replayed shard_map-ed by the sharded driver with
+        # synchronous migration scheduling collapsed into one jit dispatch
+        # + one fetch per boundary
+        self.shard_devices = shard_devices
+        self.mesh = None
+        if shard_devices is not None:
+            self.mesh = shd.expander_mesh(shard_devices)
+            if self.migration_enabled:
+                FS.plan_params(self.migration_policy)  # fail fast: needs
+                # an in-jit planner (spill / rebalance); custom host
+                # policies must use the vmap drivers
+            self.pools = FS.shard_pools(self.pools, self.mesh)
+            self.lanes = FS.shard_pools(self.lanes, self.mesh)
         n = self.n_expanders
         self.spill_events = 0
         self.spill_pages_out = np.zeros((n,), np.int64)
@@ -228,6 +249,13 @@ class Fabric:
         self.epochs_applied = 0
         self.epoch_syncs = 0
         self.spill_syncs = 0          # back-compat alias of epoch_syncs
+        # sharded-driver sync bookkeeping: one fused fetch per boundary
+        # (migration on), one deferred drain fetch per replay() call
+        # (migration off — device refs accumulate, nothing blocks)
+        self.boundaries = 0
+        self.boundary_syncs = 0
+        self.drain_syncs = 0
+        self._deferred_refs: List[Tuple] = []
         self._last_counters = np.zeros((n, S.NUM_COUNTERS), np.int64)
         self._last_free: Optional[np.ndarray] = None
         self._pending_plan: Optional[MG.MigrationPlan] = None
@@ -436,10 +464,18 @@ class Fabric:
         so accesses follow migrated pages to their new expander."""
         rem = (np.asarray(ospns, np.int32), np.asarray(writes, bool),
                np.asarray(blocks, np.int32))
-        driver = self._replay_sync if self.sync_migration \
-            else self._replay_pipelined
+        if self.shard_devices is not None:
+            driver = self._replay_sharded
+        elif self.sync_migration:
+            driver = self._replay_sync
+        else:
+            driver = self._replay_pipelined
         while rem is not None and len(rem[0]):
             rem = driver(rem)
+        if self._deferred_refs:
+            # sharded migration-off: nothing forced a fetch mid-run; the
+            # per-segment bookkeeping drains in ONE deferred sync now
+            self._drain_deferred()
         if self._pending_plan is not None:
             # drain: the plan computed off the final segment's stats has
             # nothing left to overlap — apply and commit it now (the
@@ -561,12 +597,161 @@ class Fabric:
                     return rem
         return None
 
+    def _replay_sharded(self, cur):
+        """The sharded driver (DESIGN.md §17): each segment boundary is
+        ONE jit dispatch of the shard_map-ed replay + in-jit plan +
+        collective apply (``fabric.shard.boundary_step``), committed with
+        ONE fused fetch (``_commit_boundary``) — synchronous migration
+        scheduling (the ``_replay_sync`` semantics, bit-identical for the
+        integer ``spill`` planner) at one host sync per boundary instead
+        of the pipelined driver's one per segment plus one per epoch.
+        With migration off nothing is fetched at all: per-segment device
+        references accumulate and drain in one deferred sync at the end
+        of ``replay()``."""
+        o, w, b, v, eids = partition_trace(self.placement, *cur, self.window)
+        n = self.n_expanders
+        n_win = o.shape[1]
+        seg = self._segments(n_win)
+        pos_by_exp = [np.nonzero(eids == e)[0] for e in range(n)]
+        for lo in range(0, n_win, seg):
+            hi = min(lo + seg, n_win)
+            sl = slice(lo, hi)
+            args = (self.pools, jnp.asarray(o[:, sl]), jnp.asarray(w[:, sl]),
+                    jnp.asarray(b[:, sl]), jnp.asarray(v[:, sl]),
+                    self.lanes, self._no_pending)
+            if not self.migration_enabled:
+                step = FS.replay_step(self.mesh, self.cfg, self.policy,
+                                      self.obs is not None)
+                outs = step(*args)
+                self.pools, times = outs[0], outs[1]
+                self._modeled_times = times
+                self.segments_replayed += 1
+                self._deferred_refs.append(
+                    (times, self.pools.counters,
+                     outs[2] if len(outs) > 2 else None))
+                continue
+            step = FS.boundary_step(self.mesh, self.cfg, self.policy,
+                                    FS.plan_params(self.migration_policy),
+                                    self.n_expanders)
+            (self.pools, times, ctrs_mid, free_pre, fc, fg,
+             pages, srcs, dsts, urgent, moved) = step(
+                *args, jnp.asarray(self._blocked))
+            self._modeled_times = times
+            self.segments_replayed += 1
+            self.boundaries += 1
+            moved_pages = self._commit_boundary(
+                times, ctrs_mid, free_pre, fc, fg, pages, srcs, dsts,
+                urgent, moved)
+            if len(moved_pages):
+                rem = self._rebuild(cur, pos_by_exp, hi,
+                                    np.empty((0,), np.int64))
+                if rem is not None:
+                    return rem
+        return None
+
+    @sync_contract(syncs_per="boundary", fetches=1)
+    def _commit_boundary(self, times, ctrs_mid, free_pre, fc, fg,
+                         pages, srcs, dsts, urgent, moved) -> np.ndarray:
+        """The sharded driver's ONE host sync per segment boundary: fetch
+        the boundary dispatch's whole outcome — post-replay times and
+        counters (the segment's replay delta), the in-jit plan, the
+        applied moves, and the post-apply counters/freelists (the epoch's
+        migration delta) — in a single fused ``device_get``, then run the
+        same host bookkeeping ``_fetch_view`` + ``_commit_epoch`` split
+        across two syncs on the vmap drivers."""
+        (t, ctrs_mid, free_pre, fc, fg, pages, srcs, dsts, urgent, moved,
+         ctrs_post) = jax.device_get(
+            (times, ctrs_mid, free_pre, fc, fg, pages, srcs, dsts,
+             urgent, moved, self.pools.counters))
+        self.boundary_syncs += 1
+        ctrs_mid = np.asarray(ctrs_mid, np.int64)
+        delta_replay = ctrs_mid - self._last_counters
+        self.segment_deltas.append(delta_replay)
+        self._last_free = np.asarray(free_pre, np.int64)
+        if self.obs is not None:
+            # telemetry drain: host values from this single fused fetch
+            self.obs.record_segment(self.segments_replayed - 1,
+                                    delta_replay, np.asarray(t, np.float64),
+                                    self._last_free)
+        pages = np.asarray(pages).reshape(-1)
+        srcs = np.asarray(srcs).reshape(-1)
+        dsts = np.asarray(dsts).reshape(-1)
+        psel = pages >= 0
+        if not psel.any():
+            # empty plan: no epoch happened (the collective apply was a
+            # bit-exact no-op); the snapshot advances to post-replay
+            self._last_counters = ctrs_mid
+            return np.empty((0,), np.int64)
+        plan = MG.MigrationPlan(pages[psel].astype(np.int32),
+                                srcs[psel].astype(np.int32),
+                                dsts[psel].astype(np.int32),
+                                urgent=bool(urgent))
+        if self.obs is not None:
+            self.obs.record_plan(self.segments_replayed - 1, plan,
+                                 self.migration_policy.name)
+        ctrs_post = np.asarray(ctrs_post, np.int64)
+        delta_mig = ctrs_post - ctrs_mid
+        self.migration_deltas.append(
+            (self.segments_replayed - 1, delta_mig, False))
+        self._last_counters = ctrs_post
+        free_units = np.asarray(fc, np.int64) + 8 * np.asarray(fg, np.int64)
+        self._last_free = free_units
+        moved = np.asarray(moved)
+        msel = moved >= 0
+        pages_moved = moved[msel].astype(np.int64)
+        self.placement.apply_epoch(pages_moved, dsts[msel])
+        self.epochs_applied += 1
+        if len(pages_moved):
+            np.add.at(self.spill_pages_out, srcs[msel], 1)
+            np.add.at(self.spill_pages_in, dsts[msel], 1)
+            pairs = {(int(s), int(d)) for s, d in zip(srcs[msel],
+                                                      dsts[msel])}
+            self.spill_events += len(pairs)
+            self._modeled_times = None    # migration traffic not yet priced
+            self._blocked[:] = False      # progress: conditions changed
+        else:
+            self._blocked[plan.pages] = True
+        if self.obs is not None:
+            self.obs.record_epoch(self.segments_replayed - 1, delta_mig,
+                                  kind="sync", overlapped=False,
+                                  planned=len(plan), moved=len(pages_moved),
+                                  urgent=plan.urgent, free_units=free_units)
+        if self.on_epoch is not None:
+            self.on_epoch(self, plan, pages_moved)
+        return pages_moved
+
+    @sync_contract(syncs_per="drain", fetches=1)
+    def _drain_deferred(self) -> None:
+        """Drain the sharded migration-off driver's accumulated device
+        references — per-segment times, counter snapshots, and (with obs
+        attached) freelist headroom — in ONE deferred fetch per
+        ``replay()`` call, after the whole trace replayed. Nothing
+        host-side depended on any of it mid-run, so the per-segment sync
+        of the vmap drivers goes to zero."""
+        fetched = jax.device_get(self._deferred_refs)
+        self.drain_syncs += 1
+        self._deferred_refs = []
+        seg0 = self.segments_replayed - len(fetched)
+        for i, (t, ctrs, free) in enumerate(fetched):
+            ctrs64 = np.asarray(ctrs, np.int64)
+            delta = ctrs64 - self._last_counters
+            self._last_counters = ctrs64
+            self.segment_deltas.append(delta)
+            if free is not None:
+                self._last_free = np.asarray(free, np.int64)
+            if self.obs is not None:
+                self.obs.record_segment(seg0 + i, delta,
+                                        np.asarray(t, np.float64),
+                                        self._last_free
+                                        if free is not None else None)
+
     # -- metrics -------------------------------------------------------------
 
     def counters(self) -> Dict[str, int]:
         """Summed traffic counters across expanders."""
         return S.stacked_counters_dict(self.pools)
 
+    @sync_contract(syncs_per="call", fetches=1)
     def delivered_time(self, exact: bool = True) -> np.ndarray:
         """Per-expander delivered seconds for the traffic replayed so far,
         each priced by that expander's own ``DeviceConfig`` — migration
@@ -577,20 +762,22 @@ class Fabric:
         ``exact=True`` (default, host-side) recomputes in float64 through
         the same ``exec_time_vec`` — the parity-grade numbers benches
         record. ``exact=False`` returns the float32 values the vmapped
-        replay computed on device (zero extra device work; one fetch) —
-        or, when a trailing migration invalidated them, re-prices the
-        current counters through the same float32 device path, never the
-        float64 one (the float32-vs-float64 parity asserts stay
-        meaningful)."""
+        replay computed on device (zero extra device work) — or, when a
+        trailing migration invalidated them, re-prices the current
+        counters through the same float32 device path, never the float64
+        one (the float32-vs-float64 parity asserts stay meaningful).
+
+        Both flavors cost exactly ONE fused fetch (the declared
+        contract), so calling it mid-run composes with the schedulers'
+        sync budgets instead of quietly doubling them."""
+        times = self._modeled_times
+        if times is None:
+            times = TM.exec_time_vec(self.pools.counters, self.lanes)
+        times, counters = jax.device_get((times, self.pools.counters))
         if not exact:
-            times = self._modeled_times
-            if times is None:
-                times = TM.exec_time_vec(self.pools.counters, self.lanes)
-            return np.asarray(jax.device_get(times), np.float64)
-        counters = np.asarray(jax.device_get(self.pools.counters),
-                              np.float64)
-        return TM.exec_time_vec(counters, TM.stack_devices(self.devices,
-                                                           xp=np))
+            return np.asarray(times, np.float64)
+        return TM.exec_time_vec(np.asarray(counters, np.float64),
+                                TM.stack_devices(self.devices, xp=np))
 
     def bottleneck_time(self, exact: bool = True) -> float:
         """Delivered time of the fabric serving one merged trace: expanders
@@ -611,6 +798,26 @@ class Fabric:
         pricings charge them in full on the critical path; only epochs
         the scheduler genuinely hid behind a foreground segment are
         eligible for the max() discount."""
+        rows = self._pipeline_rows()
+        if rows is None:
+            return None
+        replay, mig = rows
+        lanes = TM.stack_devices(self.devices, xp=np)
+        over = TM.pipeline_delivered_time(replay, mig, lanes, overlapped=True)
+        sync = TM.pipeline_delivered_time(replay, mig, lanes,
+                                          overlapped=False)
+        overlapped_run = (not self.sync_migration and
+                          self.pipeline_depth > 1 and
+                          self.shard_devices is None)
+        return {"overlapped_s": over, "sync_s": sync,
+                "mode": "overlapped" if overlapped_run else "sync",
+                "delivered_s": over if overlapped_run else sync}
+
+    def _pipeline_rows(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """(replay [R,N,C], mig [R,N,C]) — the pipeline row matrices
+        shared by ``pipeline_times`` and ``device_times`` (and rebuilt
+        independently by obs/export.py from the Recorder's samples; the
+        rtol=1e-9 track reconciliation pins the two constructions)."""
         if not self.segment_deltas:
             return None
         n, c = self.n_expanders, S.NUM_COUNTERS
@@ -626,14 +833,34 @@ class Fabric:
                 mig[min(i, n_seg - 1)] += d
         for j, d in enumerate(sync_epochs):
             mig[n_seg + j] += d
+        return replay, mig
+
+    def device_times(self) -> Optional[Dict[str, object]]:
+        """Per-XLA-device delivered seconds on the sharded driver: the
+        expanders a device owns execute inside one jit dispatch, so the
+        device finishes pipeline row ``r`` when its slowest owned
+        expander does — ``device_s[d] = sum_r max_{e in d} max(replay,
+        mig)``. Built from the SAME ``_pipeline_rows`` matrices as
+        ``pipeline_times`` (on the sharded driver every epoch is a
+        zero-replay sync row, so the per-row max degenerates to the sync
+        pricing and ``device_s[d] >= max_{e in d} delivered_s[e]``).
+        None on vmap drivers or before any segment has replayed."""
+        if self.shard_devices is None:
+            return None
+        rows = self._pipeline_rows()
+        if rows is None:
+            return None
+        replay, mig = rows
         lanes = TM.stack_devices(self.devices, xp=np)
-        over = TM.pipeline_delivered_time(replay, mig, lanes, overlapped=True)
-        sync = TM.pipeline_delivered_time(replay, mig, lanes,
-                                          overlapped=False)
-        overlapped_run = not self.sync_migration and self.pipeline_depth > 1
-        return {"overlapped_s": over, "sync_s": sync,
-                "mode": "overlapped" if overlapped_run else "sync",
-                "delivered_s": over if overlapped_run else sync}
+        cell = np.maximum(np.atleast_2d(TM.exec_time_vec(replay, lanes,
+                                                         xp=np)),
+                          np.atleast_2d(TM.exec_time_vec(mig, lanes,
+                                                         xp=np)))
+        owners = FS.device_of_expander(self.n_expanders, self.shard_devices)
+        device_s = np.asarray([cell[:, owners == d].max(axis=1).sum()
+                               for d in range(self.shard_devices)],
+                              np.float64)
+        return {"device_s": device_s, "owners": owners}
 
     def park_capacity(self) -> np.ndarray:
         """Per-expander compressed-region headroom in chunk units, straight
@@ -671,12 +898,19 @@ class Fabric:
 
     def sync_stats(self) -> Dict[str, int]:
         """The host-sync contract (asserted by benchmarks/fabric_bench.py):
-        one fused stats fetch per replayed segment, one moved-pages fetch
-        per committed migration epoch, nothing else."""
+        on the vmap drivers one fused stats fetch per replayed segment
+        plus one moved-pages fetch per committed migration epoch; on the
+        sharded driver one fused fetch per boundary (migration on) or
+        one deferred drain per ``replay()`` call (migration off) —
+        nothing else."""
         return {
             "segments": self.segments_replayed,
             "segment_syncs": self.segment_syncs,
             "epochs": self.epochs_applied,
             "epoch_syncs": self.epoch_syncs,
-            "host_syncs": self.segment_syncs + self.epoch_syncs,
+            "boundaries": self.boundaries,
+            "boundary_syncs": self.boundary_syncs,
+            "drain_syncs": self.drain_syncs,
+            "host_syncs": self.segment_syncs + self.epoch_syncs +
+            self.boundary_syncs + self.drain_syncs,
         }

@@ -15,12 +15,45 @@ through BOTH and asserts final pool state + counters are bit-identical
 (the refactor's parity pin — the CI smoke). ``--check-parity``
 additionally replays every expander's partition through the single-pool
 engine and asserts the summed counters match the fabric exactly.
-"""
-from __future__ import annotations
 
+``--devices N`` runs the sharded driver (DESIGN.md §17): the stacked
+pool pytree is placed on an N-device ``expander`` mesh and replayed
+shard_map-ed, with migration planned and applied inside the jit (one
+fused host fetch per boundary). The forced host-device count must reach
+XLA before its backend initializes — the repro imports below pull in
+jax — so the flag is pre-scanned from argv and merged into XLA_FLAGS as
+this module's first executable statements (same idiom as
+launch/dryrun.py). On sharded runs ``--check-parity`` asserts the
+sharded end state is bit-identical to the vmap synchronous reference
+(every pool leaf, counters included) — the shard_map-vs-vmap contract —
+and falls through to the per-shard single-pool check when no migration
+fired.
+"""
+import os
+import sys
+
+# --devices N must reach XLA before the backend initializes, and every
+# repro import below pulls in jax: pre-scan argv, merge the flag first.
+# (Mirrors common.sharding.force_host_device_count, inlined so nothing
+# jax-adjacent is imported before the env var is set.)
+for _i, _a in enumerate(sys.argv):
+    _n = None
+    if _a == "--devices" and _i + 1 < len(sys.argv):
+        _n = sys.argv[_i + 1]
+    elif _a.startswith("--devices="):
+        _n = _a.split("=", 1)[1]
+    if _n and _n.isdigit() and int(_n) > 1:
+        _kept = [f for f in os.environ.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform_device_count")]
+        _kept.append(f"--xla_force_host_platform_device_count={_n}")
+        os.environ["XLA_FLAGS"] = " ".join(_kept)
+
+# (no `from __future__ import` — it would have to precede the XLA_FLAGS
+# bootstrap above; same trade as launch/dryrun.py)
 import argparse
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -67,6 +100,11 @@ def main() -> None:
                     help="replay the trace through the depth-1 pipeline AND "
                          "the synchronous driver and assert bit-identical "
                          "final state (the CI overlapped-migration smoke)")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="run the sharded driver on an N-device expander "
+                         "mesh (forces N XLA host devices before backend "
+                         "init via the argv pre-scan at module top; "
+                         "requires --expanders divisible by N)")
     ap.add_argument("--check-parity", action="store_true")
     ap.add_argument("--trace", default=None, metavar="OUT.trace.json",
                     help="attach a repro.obs.Recorder (piggybacked on the "
@@ -119,12 +157,27 @@ def main() -> None:
                       rates_table=jnp.asarray(rates), window=args.window,
                       migration=migration, devices=devices, **kw)
 
+    if args.devices is not None:
+        from repro.fabric import shard as FS
+        if jax.device_count() < args.devices:
+            ap.error(f"--devices {args.devices} but only "
+                     f"{jax.device_count()} XLA devices visible")
+        owners = FS.device_of_expander(n, args.devices)
+        print(f"mesh: {args.devices} forced host device(s), axis "
+              f"'expander', {n} expanders "
+              f"({n // args.devices} per device)")
+        for d in range(args.devices):
+            owned = np.nonzero(owners == d)[0]
+            print(f"  device {d} ({jax.devices()[d].platform}): "
+                  f"expanders {owned.tolist()}")
+
     rec = None
     if args.trace:
         from repro.obs import Recorder
         rec = Recorder()
     fab = make_fabric(placement, sync_migration=args.sync_migration,
-                      pipeline_depth=args.pipeline_depth, obs=rec)
+                      pipeline_depth=args.pipeline_depth, obs=rec,
+                      shard_devices=args.devices)
     t0 = time.time()
     fab.replay(ospn, wr, blk)
     dt = time.time() - t0
@@ -152,9 +205,15 @@ def main() -> None:
           f"({args.accesses / bottleneck:,.0f} modeled acc/s)")
     print(f"  migration ({fab.migration_policy.name}): {fab.spill_stats()}")
     ss = fab.sync_stats()
-    assert ss["segment_syncs"] == ss["segments"], ss
-    assert ss["epoch_syncs"] == ss["epochs"], ss
-    print(f"  syncs: {ss} (one per segment + one per epoch, asserted)")
+    if args.devices is not None:
+        assert ss["segment_syncs"] == 0 and ss["epoch_syncs"] == 0, ss
+        assert ss["boundary_syncs"] == ss["boundaries"], ss
+        print(f"  syncs: {ss} (sharded: one fused fetch per boundary, "
+              f"asserted)")
+    else:
+        assert ss["segment_syncs"] == ss["segments"], ss
+        assert ss["epoch_syncs"] == ss["epochs"], ss
+        print(f"  syncs: {ss} (one per segment + one per epoch, asserted)")
     pt = fab.pipeline_times()
     if pt is not None and fab.epochs_applied:
         over = float(np.max(pt["overlapped_s"]))
@@ -171,6 +230,15 @@ def main() -> None:
         if pt is not None:
             assert np.allclose(totals["overlapped_s"], pt["overlapped_s"],
                                rtol=1e-9), "trace drifted from pipeline_times"
+        dev_totals = OBX.fabric_device_totals(rec)
+        if dev_totals is not None:
+            dts = fab.device_times()
+            assert np.allclose(dev_totals["device_s"], dts["device_s"],
+                               rtol=1e-9), \
+                "device tracks drifted from Fabric.device_times"
+            print(f"  device tracks: "
+                  f"{[f'{t * 1e6:.1f}us' for t in dts['device_s']]} "
+                  f"(reconcile with device_times at rtol=1e-9, asserted)")
         OBX.write_trace(rec, args.trace)
         mpath = (args.trace[: -len(".trace.json")] if
                  args.trace.endswith(".trace.json") else args.trace) \
@@ -191,6 +259,20 @@ def main() -> None:
               f"(bit-identical; {fs.epochs_applied} epochs)")
 
     if args.check_parity:
+        if args.devices is not None:
+            # the shard_map-vs-vmap contract: the sharded end state is
+            # bit-identical (every pool leaf, counters included) to the
+            # vmap synchronous reference on the same trace — migration
+            # live included, since the collective apply replays the host
+            # planner's exact move sequence
+            ref = make_fabric(new_placement(), sync_migration=True)
+            ref.replay(ospn, wr, blk)
+            assert fab.state_identical(ref), \
+                "sharded driver drifted from the vmap reference"
+            print(f"parity: sharded (D={args.devices}) == vmap synchronous "
+                  f"driver (bit-identical; {ref.epochs_applied} epochs; "
+                  f"sharded used {ss['host_syncs']} host syncs vs "
+                  f"{ref.sync_stats()['host_syncs']})")
         eids = placement.route(ospn)
         if (placement.overrides >= 0).any():
             print("parity check skipped: migration fired (re-run with "

@@ -12,6 +12,16 @@ reconciliation). Urgent/sync/drain epochs get their own zero-replay rows,
 charged in full on the critical path, exactly as ``pipeline_times``
 prices them.
 
+Sharded runs (``fabric_info["shard_devices"]``) additionally get one
+track per XLA *device*: the expanders a device owns run inside one jit
+dispatch, so the device's span for row ``r`` is the max over its owned
+expanders of that row's ``max(replay, migration)`` — the track extent
+equals ``fabric_device_totals(rec)["device_s"]``, reconciled against
+``Fabric.device_times()`` at rtol=1e-9 exactly like the per-expander
+tracks against ``pipeline_times``. All of it is priced from the samples
+the contracted boundary/drain fetches already carried — zero extra
+syncs.
+
 Events follow the Chrome ``trace_event`` JSON format: ``X`` complete
 events (ts/dur in microseconds), ``M`` metadata naming processes and
 tracks, ``C`` counter events for freelist headroom, ``i`` instants for
@@ -35,6 +45,7 @@ from repro.obs.recorder import Recorder
 
 _FABRIC_PID = 1
 _SERVE_PID = 2
+_DEVICE_TID = 1000     # per-XLA-device shard tracks start here
 
 
 # ---------------------------------------------------------------------------
@@ -99,6 +110,38 @@ def fabric_track_totals(rec: Recorder) -> Optional[Dict[str, np.ndarray]]:
     }
 
 
+def _expander_owners(n_expanders: int, n_devices: int) -> np.ndarray:
+    """Block expander->device placement (int [N]) — the same layout as
+    ``fabric.shard.device_of_expander``, duplicated here so the obs layer
+    stays importable without jax."""
+    return np.arange(n_expanders) // (n_expanders // n_devices)
+
+
+def fabric_device_totals(rec: Recorder) -> Optional[Dict[str, np.ndarray]]:
+    """Per-XLA-device delivered seconds on sharded runs: row ``r``'s
+    device time is the max over owned expanders of ``max(replay, mig)``,
+    summed over rows — the extent of the per-device tracks in the
+    exported trace, and the quantity ``Fabric.device_times()`` computes
+    from its own bookkeeping (the rtol=1e-9 reconciliation pins both).
+    None on vmap runs (no ``shard_devices``) or before any segment."""
+    info = rec.fabric_info or {}
+    n_dev = info.get("shard_devices")
+    rows = _fabric_rows(rec)
+    if not n_dev or rows is None:
+        return None
+    from repro.simx import time as TM
+    replay, mig, _ = rows
+    lanes = _fabric_lanes(rec)
+    cell = np.maximum(np.atleast_2d(TM.exec_time_vec(replay, lanes, xp=np)),
+                      np.atleast_2d(TM.exec_time_vec(mig, lanes, xp=np)))
+    owners = _expander_owners(info["n_expanders"], n_dev)
+    return {
+        "device_s": np.asarray([cell[:, owners == d].max(axis=1).sum()
+                                for d in range(n_dev)], np.float64),
+        "owners": owners,
+    }
+
+
 def _fabric_events(rec: Recorder) -> List[Dict[str, Any]]:
     rows = _fabric_rows(rec)
     if rows is None:
@@ -121,7 +164,18 @@ def _fabric_events(rec: Recorder) -> List[Dict[str, Any]]:
         ev.append({"ph": "M", "pid": _FABRIC_PID, "tid": 2 * e + 1,
                    "name": "thread_name",
                    "args": {"name": f"expander{e}/migration"}})
+    n_dev = (rec.fabric_info or {}).get("shard_devices")
+    owners = None
+    if n_dev:
+        owners = _expander_owners(n, n_dev)
+        for d in range(n_dev):
+            owned = np.nonzero(owners == d)[0]
+            ev.append({"ph": "M", "pid": _FABRIC_PID, "tid": _DEVICE_TID + d,
+                       "name": "thread_name",
+                       "args": {"name": f"device{d}/shard "
+                                f"(e{owned[0]}..e{owned[-1]})"}})
     cursor = np.zeros((n,), np.float64)        # per-expander clock, us
+    dev_cursor = np.zeros((n_dev or 0,), np.float64)  # per-device clock, us
     for r in range(len(replay)):
         lab = labels[r]
         internal = S.traffic_vector(replay[r]).sum(axis=-1)
@@ -145,6 +199,19 @@ def _fabric_events(rec: Recorder) -> List[Dict[str, Any]]:
                     "args": {"moved": lab["moved"],
                              "planned": lab["planned"]}})
             cursor[e] += max(tr_us, tm_us)
+        if owners is not None:
+            row_us = np.maximum(t_replay[r], t_mig[r]) * 1e6
+            kinds = "+".join(lab["kinds"])
+            name = f"seg {lab['seg']}" if r < n_seg else \
+                f"epoch[{kinds}]@seg{lab['seg']}"
+            for d in range(n_dev):
+                dur = float(np.max(row_us[owners == d]))
+                ev.append({
+                    "ph": "X", "pid": _FABRIC_PID, "tid": _DEVICE_TID + d,
+                    "ts": float(dev_cursor[d]), "dur": dur, "name": name,
+                    "args": {"moved": lab["moved"],
+                             "planned": lab["planned"]}})
+                dev_cursor[d] += dur
         if r < n_seg and rec.segments[r]["free_units"] is not None:
             ev.append({
                 "ph": "C", "pid": _FABRIC_PID, "tid": 0,
@@ -230,6 +297,10 @@ def build_trace(rec: Recorder) -> Dict[str, Any]:
         other["fabric_overlapped_s"] = [float(t)
                                         for t in totals["overlapped_s"]]
         other["fabric_sync_s"] = [float(t) for t in totals["sync_s"]]
+    dev_totals = fabric_device_totals(rec)
+    if dev_totals is not None:
+        other["fabric_device_s"] = [float(t)
+                                    for t in dev_totals["device_s"]]
     return {"traceEvents": events, "displayTimeUnit": "ms",
             "otherData": other}
 
@@ -262,6 +333,12 @@ def metrics_snapshot(rec: Recorder, **meta: Any) -> Dict[str, Any]:
         if totals is not None:
             fab["overlapped_s"] = [float(t) for t in totals["overlapped_s"]]
             fab["sync_s"] = [float(t) for t in totals["sync_s"]]
+        if rec.fabric_info.get("shard_devices"):
+            fab["shard_devices"] = rec.fabric_info["shard_devices"]
+            dev_totals = fabric_device_totals(rec)
+            if dev_totals is not None:
+                fab["device_s"] = [float(t)
+                                   for t in dev_totals["device_s"]]
         out["fabric"] = fab
     if rec.cells:
         out["simx"] = {"cells": rec.cells}

@@ -76,6 +76,10 @@ class Recorder:
             "sync_migration": fabric.sync_migration,
             "migration": fabric.migration_policy.name,
             "migration_enabled": fabric.migration_enabled,
+            # None on vmap drivers; the sharded driver's mesh size. The
+            # exporters derive the block expander->device placement from
+            # (n_expanders, shard_devices) — the recorder stays jax-free.
+            "shard_devices": getattr(fabric, "shard_devices", None),
         }
 
     def attach_serve(self, engine) -> None:

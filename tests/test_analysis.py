@@ -509,6 +509,8 @@ def test_injected_int_traced_fails_lint():
     assert marker in src
     lines = src.splitlines()
     idx = next(i for i, l in enumerate(lines) if marker in l)
+    while not lines[idx].rstrip().endswith(":"):  # signature may wrap
+        idx += 1
     # first statement line of the body: inject a concretizing cast of a
     # parameter that is traced (pool) under the jitted callers
     indent = " " * 4
